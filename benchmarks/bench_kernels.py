@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: wall time of the jnp reference paths on CPU (the Pallas
+kernels target TPU; interpret-mode timing is not meaningful, so the reference path is
+what gets timed) + analytic FLOP/byte intensity per kernel."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.ref import decode_attention_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ref import ssd_ref
+from benchmarks.common import emit
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main(quick: bool = False) -> None:
+    B, H, S, hd = 1, 4, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, hd), jnp.float32)
+
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    us = _time(f, q, k, v)
+    flops = 4 * B * H * S * S * hd
+    emit("kernels/flash_attention_ref", us, f"flops={flops:.2e} achieved={flops/us*1e6/1e9:.1f}GFLOP/s")
+
+    qd = q[:, :, :1].reshape(B, H, hd)
+    fd = jax.jit(lambda q, k, v: decode_attention_ref(q, k, v, jnp.int32(S)))
+    us = _time(fd, qd, k, v)
+    byts = 2 * B * H * S * hd * 4
+    emit("kernels/flash_decode_ref", us, f"kv_bytes={byts:.2e} bw={byts/us*1e6/1e9:.1f}GB/s")
+
+    nh, ds, chunk = 4, 32, 64
+    x = jax.random.normal(ks[3], (B, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[1], (nh,)) * 0.5)
+    Bm = jax.random.normal(ks[2], (B, S, 1, ds), jnp.float32)
+    Cm = jax.random.normal(ks[3], (B, S, 1, ds), jnp.float32)
+    fs = jax.jit(lambda *a: ssd_ref(*a, chunk)[0])
+    us = _time(fs, x, dt, A, Bm, Cm)
+    ssd_flops = 2 * B * S * nh * hd * (chunk + 2 * ds)
+    emit("kernels/ssd_scan_ref", us, f"flops~{ssd_flops:.2e} chunk={chunk}")
+
+    xr = jax.random.normal(ks[0], (4096, 1024), jnp.float32)
+    sc = jnp.ones((1024,))
+    fr = jax.jit(rmsnorm_ref)
+    us = _time(fr, xr, sc)
+    rb = 2 * xr.size * 4
+    emit("kernels/rmsnorm_ref", us, f"bytes={rb:.2e} bw={rb/us*1e6/1e9:.1f}GB/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Fig 10 (claim C5): outer-optimizer ablation — FedAvg vs SGD+Nesterov server
+momentum vs FedAvg with kept local optimizer states."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, run_fed, tiny_cfg
+
+
+def main(quick: bool = False) -> None:
+    rounds, tau = (4, 6) if quick else (6, 8)
+    cfg = tiny_cfg(d_model=128)
+    results = {}
+    t0 = time.time()
+    results["fedavg"] = run_fed(cfg=cfg, rounds=rounds, tau=tau, clients=4)
+    results["sgd_nesterov"] = run_fed(
+        cfg=cfg, rounds=rounds, tau=tau, clients=4, outer="fedmom", outer_lr=0.7
+    )
+    results["fedavg_keepopt"] = run_fed(
+        cfg=cfg, rounds=rounds, tau=tau, clients=4, keep_opt=True
+    )
+    dt = (time.time() - t0) * 1e6 / (3 * rounds * tau)
+    finals = {}
+    for name, r in results.items():
+        h = r["history"]
+        finals[name] = h[-1]["val_ppl"]
+        emit(
+            f"outer_opt/{name}",
+            dt,
+            f"val_ppl={h[-1]['val_ppl']:.1f} "
+            f"model_norm={h[-1]['global_model_norm']:.1f} "
+            f"train_loss={h[-1]['train_loss']:.3f}",
+        )
+    best = min(finals, key=finals.get)
+    emit("outer_opt/winner", 0.0, f"best={best} (paper C5 recommends fedavg stateless)")
+
+
+if __name__ == "__main__":
+    main()

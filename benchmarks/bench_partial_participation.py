@@ -1,0 +1,32 @@
+"""Paper Fig 6 (claim C4): sampling a small client cohort per round matches full
+participation. Full K=P vs partial K=P/4 on the same population."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, run_fed, tiny_cfg
+
+
+def main(quick: bool = False) -> None:
+    rounds, tau, pop = (4, 6, 8) if quick else (7, 8, 8)
+    cfg = tiny_cfg(d_model=128)
+    t0 = time.time()
+    full = run_fed(cfg=cfg, rounds=rounds, tau=tau, clients=pop, population=pop)
+    part = run_fed(cfg=cfg, rounds=rounds, tau=tau, clients=pop // 4, population=pop)
+    dt = (time.time() - t0) * 1e6
+    f_ppl = full["history"][-1]["val_ppl"]
+    p_ppl = part["history"][-1]["val_ppl"]
+    emit(
+        "partial_participation/full_K8",
+        dt / (2 * rounds * tau),
+        f"val_ppl={f_ppl:.1f} parallel_compute=1.0x",
+    )
+    emit(
+        "partial_participation/sampled_K2",
+        dt / (2 * rounds * tau),
+        f"val_ppl={p_ppl:.1f} parallel_compute=0.25x rel_gap={(p_ppl-f_ppl)/f_ppl:+.3f}",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Table 1 + Table 2: token budgets and step counts per model scale.
+
+Analytic reproduction of the paper's budgeting: Chinchilla-optimal tokens (20/param on
+the vocabulary-adjusted size), the MPT recipe counts, and the federated sequential /
+parallel split (parallel = sequential x clients)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from benchmarks.common import emit
+
+# (name, seq_len, batch, clients)  — Tables 1/4
+ROWS = [
+    ("photon-75m", 1024, 256, 8),
+    ("photon-125m", 2048, 256, 8),
+    ("photon-350m", 2048, 256, 8),
+    ("photon-1.3b", 2048, 512, 8),
+    ("photon-3b", 2048, 512, 64),
+    ("photon-7b", 2048, 1024, 64),
+]
+
+# vocabulary-adjusted sizes from the paper's Table 1 (Hoffmann-equivalent params)
+VOCAB_ADJ = {
+    "photon-75m": 58.54e6,
+    "photon-125m": 110.89e6,
+    "photon-350m": 331.19e6,
+    "photon-1.3b": 1.26e9,
+    "photon-3b": 2.96e9,
+    "photon-7b": 6.92e9,
+}
+
+
+def main(quick: bool = False) -> None:
+    import time
+
+    t0 = time.time()
+    for name, seq, batch, clients in ROWS:
+        cfg = get_config(name)
+        n = cfg.param_count()
+        n_adj = VOCAB_ADJ[name]
+        chinchilla = 20.0 * n_adj
+        steps = chinchilla / (seq * batch)
+        par_tokens = chinchilla * clients / 8  # parallel budget at the paper's scale
+        emit(
+            f"scaling_table/{name}",
+            (time.time() - t0) * 1e6 / len(ROWS),
+            f"N={n/1e6:.0f}M Nadj={n_adj/1e6:.0f}M chinchilla_tokens={chinchilla:.2e} "
+            f"steps@B{batch}xS{seq}={steps:.0f} parallel_tokens={par_tokens:.2e}",
+        )
+
+
+if __name__ == "__main__":
+    main()

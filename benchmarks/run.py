@@ -1,0 +1,65 @@
+"""Benchmark harness — one module per paper table/figure (deliverable (d)).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # full set
+  PYTHONPATH=src python -m benchmarks.run --quick    # CI-speed subset
+  PYTHONPATH=src python -m benchmarks.run --only heterogeneity
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_communication,
+    bench_eval_harness,
+    bench_fed_vs_central,
+    bench_heterogeneity,
+    bench_kernels,
+    bench_norm_dynamics,
+    bench_outer_optimizers,
+    bench_partial_participation,
+    bench_scaling_table,
+)
+
+BENCHES = [
+    ("scaling_table", bench_scaling_table),  # Tables 1-3
+    ("communication", bench_communication),  # §4.3 / C7
+    ("kernels", bench_kernels),  # kernel layer
+    ("fed_vs_central", bench_fed_vs_central),  # Fig 3/9, C1-C2
+    ("heterogeneity", bench_heterogeneity),  # Fig 4/5, C3
+    ("partial_participation", bench_partial_participation),  # Fig 6, C4
+    ("outer_optimizers", bench_outer_optimizers),  # Fig 10, C5
+    ("norm_dynamics", bench_norm_dynamics),  # Fig 7/8, C6
+    ("eval_harness", bench_eval_harness),  # Tables 5/6 proxy
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod.main(quick=args.quick)
+        except Exception:
+            failures += 1
+            print(f"{name},0,FAILED", file=sys.stdout)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Checkpointing for the Photon Aggregator and LLM Nodes (§4.1).
+
+Server state (global params + outer optimizer + round bookkeeping) and per-client state
+(data cursors; inner optimizer when stateful) are stored as .npz pytree blobs + a JSON
+manifest, replacing the paper's MinIO/S3 object store with the local filesystem while
+keeping the same resume semantics: `latest_round()` + `load_server()` give automatic
+federated training resumption from the most recent round (§6.2).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf) if not hasattr(leaf, "dtype") or leaf.dtype != jax.numpy.bfloat16 \
+            else np.asarray(leaf.astype(jax.numpy.float32))
+        flat[jax.tree_util.keystr(path)] = arr
+    return flat
+
+
+def save_pytree(path: str, tree) -> None:
+    flat = _flatten_with_paths(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load_pytree(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in leaves_with_path:
+        key = jax.tree_util.keystr(p)
+        arr = data[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(
+            jax.numpy.asarray(arr, dtype=getattr(leaf, "dtype", arr.dtype))
+        )
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Round-granular checkpoint store with a JSON manifest per round."""
+
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+
+    def _round_dir(self, rnd: int) -> str:
+        return os.path.join(self.dir, f"round_{rnd:06d}")
+
+    # --- server ---------------------------------------------------------
+    def save_server(self, rnd: int, state, extra: Optional[Dict] = None) -> str:
+        d = self._round_dir(rnd)
+        os.makedirs(d, exist_ok=True)
+        save_pytree(os.path.join(d, "server.npz"), state)
+        manifest = {"round": rnd, "extra": extra or {}}
+        with open(os.path.join(d, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        self._gc()
+        return d
+
+    def save_client(self, rnd: int, client_id: int, data_state: Dict) -> None:
+        """Client-private state: data cursor etc. (kept outside server control, §4.1)."""
+        d = self._round_dir(rnd)
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"client_{client_id:04d}.json"), "w") as f:
+            json.dump(data_state, f)
+
+    def latest_round(self) -> Optional[int]:
+        rounds = [
+            int(n.split("_")[1])
+            for n in os.listdir(self.dir)
+            if n.startswith("round_")
+            and os.path.exists(os.path.join(self.dir, n, "manifest.json"))
+        ]
+        return max(rounds) if rounds else None
+
+    def load_server(self, rnd: int, like) -> Tuple[Any, Dict]:
+        d = self._round_dir(rnd)
+        state = load_pytree(os.path.join(d, "server.npz"), like)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        return state, manifest
+
+    def load_client(self, rnd: int, client_id: int) -> Dict:
+        with open(os.path.join(self._round_dir(rnd), f"client_{client_id:04d}.json")) as f:
+            return json.load(f)
+
+    def _gc(self) -> None:
+        rounds = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.dir) if n.startswith("round_")
+        )
+        for rnd in rounds[: -self.keep_last]:
+            d = self._round_dir(rnd)
+            for fn in os.listdir(d):
+                os.remove(os.path.join(d, fn))
+            os.rmdir(d)

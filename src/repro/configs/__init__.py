@@ -1,0 +1,23 @@
+"""Config registry: importing this package registers every architecture."""
+from repro.configs.base import (  # noqa: F401
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    InputShape,
+    LayerKind,
+    ModelConfig,
+    get_config,
+    list_configs,
+)
+
+# Registration side effects:
+from repro.configs import granite_3_2b  # noqa: F401
+from repro.configs import qwen3_1_7b  # noqa: F401
+from repro.configs import mamba2_1_3b  # noqa: F401
+from repro.configs import jamba_v0_1_52b  # noqa: F401
+from repro.configs import deepseek_moe_16b  # noqa: F401
+from repro.configs import llama4_scout_17b_a16e  # noqa: F401
+from repro.configs import whisper_large_v3  # noqa: F401
+from repro.configs import chameleon_34b  # noqa: F401
+from repro.configs import deepseek_coder_33b  # noqa: F401
+from repro.configs import gemma3_4b  # noqa: F401
+from repro.configs import photon  # noqa: F401

@@ -1,0 +1,12 @@
+"""The paper's primary contribution: the Photon federated pre-training engine."""
+from repro.core.federated import (  # noqa: F401
+    FederatedConfig,
+    centralized_step,
+    federated_round,
+    hierarchical_mean,
+    init_centralized_state,
+    init_federated_state,
+)
+from repro.core.inner_opt import InnerOptConfig, cosine_lr, global_norm  # noqa: F401
+from repro.core.outer_opt import OuterOptConfig  # noqa: F401
+from repro.core.sampler import sample_round  # noqa: F401

@@ -1,0 +1,109 @@
+"""Local (client-side) optimizers: AdamW and SGD, implemented from scratch, plus the
+paper's cosine learning-rate schedule synchronized across *sequential* steps (Table 3).
+
+The inner optimizer runs inside each client's local-step scan; its state is by default
+discarded between rounds ("stateless clients", paper §7.8).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class InnerOptConfig:
+    name: str = "adamw"  # 'adamw' | 'sgd'
+    lr_max: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 1e-5
+    grad_clip: float = 1.0
+    # cosine schedule (synchronized across sequential steps, paper Table 3)
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    alpha: float = 0.1  # lr_min = alpha * lr_max
+
+
+def cosine_lr(cfg: InnerOptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_max * step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps),
+        0.0,
+        1.0,
+    )
+    lr_min = cfg.alpha * cfg.lr_max
+    cos = lr_min + 0.5 * (cfg.lr_max - lr_min) * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * scale.astype(x.dtype), tree), gn
+
+
+def init_inner_state(cfg: InnerOptConfig, params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+    if cfg.name == "adamw":
+        return {"m": zeros(), "v": zeros(), "count": jnp.zeros((), jnp.int32)}
+    if cfg.name == "sgd":
+        return {"mom": zeros(), "count": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.name)
+
+
+def inner_update(
+    cfg: InnerOptConfig,
+    params,
+    grads,
+    state: Dict[str, Any],
+    global_step: jax.Array,  # sequential step index for the cosine schedule
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One local optimizer step. Returns (params, state, metrics)."""
+    grads, raw_norm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = cosine_lr(cfg, global_step)
+    count = state["count"] + 1
+
+    if cfg.name == "adamw":
+        c = count.astype(jnp.float32)
+        b1c = 1.0 - cfg.beta1**c
+        b2c = 1.0 - cfg.beta2**c
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: cfg.beta1 * m + (1 - cfg.beta1) * g.astype(m.dtype), state["m"], grads
+        )
+        new_v = jax.tree_util.tree_map(
+            lambda v, g: cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g.astype(v.dtype)),
+            state["v"],
+            grads,
+        )
+
+        def upd(p, m, v):
+            mh = m / b1c
+            vh = v / b2c
+            step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p
+            return (p - lr * step).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, new_m, new_v)
+        new_state = {"m": new_m, "v": new_v, "count": count}
+    else:  # sgd with heavy-ball momentum
+        new_mom = jax.tree_util.tree_map(
+            lambda mom, g: 0.9 * mom + g.astype(mom.dtype), state["mom"], grads
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, mom: (p - lr * (mom + cfg.weight_decay * p)).astype(p.dtype),
+            params,
+            new_mom,
+        )
+        new_state = {"mom": new_mom, "count": count}
+
+    metrics = {"lr": lr, "grad_norm": raw_norm, "applied_update_norm": lr * raw_norm}
+    return new_params, new_state, metrics

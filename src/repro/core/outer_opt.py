@@ -1,0 +1,90 @@
+"""Server-side (outer) optimizers operating on aggregated pseudo-gradients.
+
+The paper evaluates FedAvg (η_s = 1, no momentum — recommended, §7.8), server-side
+Nesterov momentum "FedMom" [47] (Table 3 uses η_s ∈ {0.1..0.7}, μ_s = 0.9), and the
+FedOPT family; we implement FedAvg, FedMomentum (Nesterov), and FedAdam.
+
+Convention: pseudo-gradient Δ = θ_global − mean_k θ_k  (Algorithm 1, L.7–9), so the
+update moves θ in −Δ direction: θ ← θ − η_s · f(Δ).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OuterOptConfig:
+    name: str = "fedavg"  # 'fedavg' | 'fedmom' | 'fedadam'
+    lr: float = 1.0  # η_s (paper Table 3: 0.7 for fedmom at most scales)
+    momentum: float = 0.9  # μ_s
+    nesterov: bool = True
+    beta2: float = 0.99  # fedadam
+    eps: float = 1e-8
+
+
+def init_outer_state(cfg: OuterOptConfig, params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+    if cfg.name == "fedavg":
+        return {"round": jnp.zeros((), jnp.int32)}
+    if cfg.name == "fedmom":
+        return {"momentum": zeros(), "round": jnp.zeros((), jnp.int32)}
+    if cfg.name == "fedadam":
+        return {"m": zeros(), "v": zeros(), "round": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.name)
+
+
+def outer_update(
+    cfg: OuterOptConfig,
+    global_params,
+    pseudo_grad,  # Δ = θ_global − mean_k θ_k   (same pytree as params)
+    state: Dict[str, Any],
+) -> Tuple[Any, Dict[str, Any]]:
+    rnd = state["round"] + 1
+    if cfg.name == "fedavg":
+        new_params = jax.tree_util.tree_map(
+            lambda p, d: (p - cfg.lr * d).astype(p.dtype), global_params, pseudo_grad
+        )
+        return new_params, {"round": rnd}
+
+    if cfg.name == "fedmom":
+        new_mom = jax.tree_util.tree_map(
+            lambda b, d: cfg.momentum * b + d.astype(b.dtype), state["momentum"], pseudo_grad
+        )
+        if cfg.nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda b, d: cfg.momentum * b + d.astype(b.dtype), new_mom, pseudo_grad
+            )
+        else:
+            upd = new_mom
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p - cfg.lr * u).astype(p.dtype), global_params, upd
+        )
+        return new_params, {"momentum": new_mom, "round": rnd}
+
+    if cfg.name == "fedadam":
+        c = rnd.astype(jnp.float32)
+        new_m = jax.tree_util.tree_map(
+            lambda m, d: cfg.momentum * m + (1 - cfg.momentum) * d.astype(m.dtype),
+            state["m"],
+            pseudo_grad,
+        )
+        new_v = jax.tree_util.tree_map(
+            lambda v, d: cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(d.astype(v.dtype)),
+            state["v"],
+            pseudo_grad,
+        )
+        b1c = 1.0 - cfg.momentum**c
+        b2c = 1.0 - cfg.beta2**c
+        new_params = jax.tree_util.tree_map(
+            lambda p, m, v: (p - cfg.lr * (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)).astype(p.dtype),
+            global_params,
+            new_m,
+            new_v,
+        )
+        return new_params, {"m": new_m, "v": new_v, "round": rnd}
+
+    raise ValueError(cfg.name)

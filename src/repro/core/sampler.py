@@ -1,0 +1,25 @@
+"""Reproducible client sampling (Algorithm 1, L.4): each round the server samples K
+clients uniformly without replacement from the population P. Seeded and stateless —
+`sample_round(seed, round, P, K)` is a pure function so runs are exactly resumable
+(paper §6.1 "reproducible sampling").
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def sample_round(seed: int, round_idx: int, population: int, k: int) -> np.ndarray:
+    """Deterministic K-of-P sample for a given round."""
+    if k > population:
+        raise ValueError(f"cannot sample {k} of {population}")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, round_idx]))
+    return np.sort(rng.choice(population, size=k, replace=False))
+
+
+def participation_counts(seed: int, n_rounds: int, population: int, k: int) -> np.ndarray:
+    counts = np.zeros(population, np.int64)
+    for r in range(n_rounds):
+        counts[sample_round(seed, r, population, k)] += 1
+    return counts

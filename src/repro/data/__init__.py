@@ -1,0 +1,14 @@
+from repro.data.partition import (  # noqa: F401
+    PILE_CATEGORIES,
+    build_client_streams,
+    make_heterogeneous_partition,
+    validate_disjoint,
+    validation_stream,
+)
+from repro.data.streams import (  # noqa: F401
+    FileShardStream,
+    MixedStream,
+    SyntheticCategoryStream,
+    TokenStream,
+    round_batches,
+)

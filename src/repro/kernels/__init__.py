@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each with a pure-jnp
+ref.py oracle and a jit'd ops.py wrapper (interpret=True on CPU hosts)."""

@@ -1,0 +1,57 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+Handles layout (model code uses (B, S, H, hd); kernel uses (B, H, S, hd)), block-size
+selection (MXU-aligned), padding to block multiples, and the CPU/TPU dispatch
+(interpret mode on CPU hosts so the same code path is testable everywhere).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _pick_block(s: int, preferred: int = 128) -> int:
+    for b in (preferred, 64, 32, 16, 8):
+        if s % b == 0:
+            return b
+    return s
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_offset", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, hd) — model layout
+    k: jax.Array,  # (B, Sk, Hkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _on_cpu()
+    if window is not None and not isinstance(window, int):
+        raise TypeError("kernel path needs a static window")
+
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    Sq, Sk = qt.shape[2], kt.shape[2]
+    bq, bk = _pick_block(Sq), _pick_block(Sk)
+    out = flash_attention_fwd(
+        qt, kt, vt,
+        causal=causal, window=window, q_offset=q_offset,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, sliding window)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, Sq, hd)
+    k: jax.Array,  # (B, Hkv, Sk, hd)
+    v: jax.Array,  # (B, Hkv, Sk, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,  # absolute position of q[0] (decode: Sk - Sq)
+) -> jax.Array:
+    B, Hq, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    grp = Hq // Hkv
+    qr = q.reshape(B, Hkv, grp, Sq, hd).astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhsd->bhgqs", qr, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bhsd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, Sq, hd).astype(q.dtype)

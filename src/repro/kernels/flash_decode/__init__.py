@@ -1,0 +1,3 @@
+from repro.kernels.flash_decode import ops, ref  # noqa: F401
+from repro.kernels.flash_decode.kernel import flash_decode_fwd  # noqa: F401
+from repro.kernels.flash_decode.ops import flash_decode  # noqa: F401

@@ -1,0 +1,45 @@
+"""Jit'd wrapper for the flash-decode kernel (model layout (B, 1, H, hd) queries)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+def _pick_block(s: int, preferred: int = 512) -> int:
+    for b in (preferred, 256, 128, 64, 32, 16, 8):
+        if s % b == 0:
+            return b
+    return s
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def flash_decode(
+    q: jax.Array,  # (B, 1, Hq, hd) — model layout, single new token
+    k_cache: jax.Array,  # (B, S, Hkv, hd)
+    v_cache: jax.Array,
+    kv_len: jax.Array,  # scalar or (B,)
+    *,
+    window: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _on_cpu()
+    B = q.shape[0]
+    qt = q[:, 0].swapaxes(1, 1)  # (B, Hq, hd)
+    kt = jnp.moveaxis(k_cache, 1, 2)  # (B, Hkv, S, hd)
+    vt = jnp.moveaxis(v_cache, 1, 2)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    out = flash_decode_fwd(
+        qt, kt, vt, kv_len,
+        window=window, block_k=_pick_block(kt.shape[2]), interpret=interpret,
+    )
+    return out[:, None]  # (B, 1, Hq, hd)

@@ -1,0 +1,36 @@
+"""Oracle for single-token decode attention over a long KV cache."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, Hq, hd) — one query token per sequence
+    k: jax.Array,  # (B, Hkv, S, hd)
+    v: jax.Array,  # (B, Hkv, S, hd)
+    kv_len: jax.Array,  # (B,) or scalar — valid cache length
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    B, Hq, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    grp = Hq // Hkv
+    qr = q.reshape(B, Hkv, grp, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qr, k.astype(jnp.float32)) / jnp.sqrt(
+        jnp.asarray(hd, jnp.float32)
+    )
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len), (B,))
+    pos = jnp.arange(S)
+    mask = pos[None] < kv_len[:, None]  # (B, S)
+    if window is not None:
+        q_pos = kv_len - 1
+        mask &= pos[None] > (q_pos[:, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.rmsnorm import ops, ref  # noqa: F401
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd  # noqa: F401
+from repro.kernels.rmsnorm.ops import rmsnorm  # noqa: F401

@@ -1,0 +1,32 @@
+"""Jit'd wrapper for the fused RMSNorm kernel (arbitrary leading dims)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+def _pick_block(r: int, preferred: int = 256) -> int:
+    for b in (preferred, 128, 64, 32, 16, 8, 4, 2, 1):
+        if r % b == 0:
+            return b
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6, interpret=None) -> jax.Array:
+    if interpret is None:
+        interpret = _on_cpu()
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1])
+    out = rmsnorm_fwd(
+        x2d, scale, eps=eps, block_rows=_pick_block(x2d.shape[0]), interpret=interpret
+    )
+    return out.reshape(shape)

@@ -1,0 +1,9 @@
+"""Oracle for the fused RMSNorm kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(x.dtype)

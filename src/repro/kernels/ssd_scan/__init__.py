@@ -1,0 +1,3 @@
+from repro.kernels.ssd_scan import ops, ref  # noqa: F401
+from repro.kernels.ssd_scan.kernel import ssd_scan_fwd  # noqa: F401
+from repro.kernels.ssd_scan.ops import ssd  # noqa: F401

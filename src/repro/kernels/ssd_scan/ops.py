@@ -1,0 +1,53 @@
+"""Jit'd wrapper for the SSD chunk-scan kernel (model layout (B, S, nh, hd))."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jax.Array,  # (B, S, nh, hd)
+    dt: jax.Array,  # (B, S, nh) — post-softplus
+    A: jax.Array,  # (nh,) negative
+    Bm: jax.Array,  # (B, S, G, ds)
+    Cm: jax.Array,  # (B, S, G, ds)
+    chunk: int = 64,
+    initial_state: Optional[jax.Array] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    if interpret is None:
+        interpret = _on_cpu()
+    B, S, nh, hd = x.shape
+    G, ds = Bm.shape[2], Bm.shape[3]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if initial_state is None:
+        initial_state = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    y, final = ssd_scan_fwd(
+        jnp.moveaxis(x, 1, 2),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 2),
+        A.astype(jnp.float32),
+        jnp.moveaxis(Bm, 1, 2),
+        jnp.moveaxis(Cm, 1, 2),
+        initial_state.astype(jnp.float32),
+        chunk=chunk,
+        interpret=interpret,
+    )
+    y = jnp.moveaxis(y, 1, 2)
+    if pad:
+        y = y[:, :S]
+    return y, final

@@ -1,0 +1,52 @@
+"""Oracle for the SSD chunk-scan kernel: re-exports the model-level chunked SSD
+implementation (itself validated against a naive O(S·ds) sequential recurrence here)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked  # the pure-jnp chunked implementation
+
+
+def ssd_naive(
+    x: jax.Array,  # (B, S, nh, hd)
+    dt: jax.Array,  # (B, S, nh)
+    A: jax.Array,  # (nh,)
+    Bm: jax.Array,  # (B, S, G, ds)
+    Cm: jax.Array,  # (B, S, G, ds)
+    initial_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Token-by-token linear recurrence — the ground-truth semantics."""
+    B, S, nh, hd = x.shape
+    G, ds = Bm.shape[2], Bm.shape[3]
+    rep = nh // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    state = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((B, nh, hd, ds), jnp.float32)
+    )
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # (B,nh,hd), (B,nh), (B,nh,ds), (B,nh,ds)
+        dA = jnp.exp(dtt * A.astype(jnp.float32))
+        dx = xt.astype(jnp.float32) * dtt[..., None]
+        state = state * dA[..., None, None] + jnp.einsum("bhd,bhn->bhdn", dx, Bt)
+        y = jnp.einsum("bhdn,bhn->bhd", state, Ct)
+        return state, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bh, 1, 0),
+        jnp.moveaxis(Ch, 1, 0),
+    )
+    final, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+ssd_ref = ssd_chunked  # chunked oracle (validated against ssd_naive in tests)

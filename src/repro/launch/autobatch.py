@@ -1,0 +1,58 @@
+"""Automatic micro-batch sizing (paper §6.2).
+
+The paper binary-searches powers of two on real GPUs until OOM; on TPU, memory is
+static after compile, so we *estimate* from the model's memory model and then verify
+the chosen size against ``compiled.memory_analysis()`` — a compile-time "OOM check"
+rather than a runtime one.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+
+TPU_V5E_HBM = 16 * 1024**3
+
+
+def activation_bytes_per_token(cfg: ModelConfig) -> float:
+    """Rough per-token activation residency during one remat'd train step."""
+    d = cfg.d_model
+    per_layer_carry = 2 * d  # bf16 residual stream saved per layer
+    # remat working set ~ a few layer-widths; attention adds the chunked score block
+    working = 12 * d
+    return cfg.n_layers * per_layer_carry + working
+
+
+def estimate_micro_batch(
+    cfg: ModelConfig,
+    seq_len: int,
+    *,
+    hbm_bytes: int = TPU_V5E_HBM,
+    model_parallel: int = 16,
+    param_bytes_per_param: float = 4.0,
+    opt_copies: float = 4.0,  # params + m + v + pseudo-grad/momentum
+) -> int:
+    """Largest power-of-two micro-batch expected to fit; >=1."""
+    params_per_dev = cfg.param_count() / model_parallel
+    fixed = params_per_dev * param_bytes_per_param * opt_copies
+    budget = hbm_bytes * 0.9 - fixed
+    if budget <= 0:
+        return 0
+    per_seq = activation_bytes_per_token(cfg) * seq_len
+    n = int(budget // per_seq)
+    mb = 1
+    while mb * 2 <= n:
+        mb *= 2
+    return mb if n >= 1 else 0
+
+
+def verify_micro_batch(compiled, hbm_bytes: int = TPU_V5E_HBM) -> bool:
+    """Compile-time OOM check from memory_analysis()."""
+    mem = compiled.memory_analysis()
+    total = (
+        mem.argument_size_in_bytes
+        + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes
+        - mem.alias_size_in_bytes
+    )
+    return total <= hbm_bytes

@@ -1,0 +1,28 @@
+"""Production mesh construction (deliverable (e)).
+
+A FUNCTION, not a module-level constant, so importing this module never touches jax
+device state. Single pod: (data=16, model=16) = 256 chips; multi-pod: 2 pods = 512.
+In Photon terms: 'model' is the within-client model-parallel group, ('pod','data')
+indexes federated clients, and the 'pod' axis is the hierarchical-aggregation boundary
+(client islands → server), matching Algorithm 1's two-level scheme.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Degenerate mesh for single-host simulation/tests."""
+    n = jax.device_count()
+    assert n % model == 0
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )

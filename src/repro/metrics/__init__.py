@@ -1,0 +1,6 @@
+from repro.metrics.fedmetrics import (  # noqa: F401
+    MetricLogger,
+    activation_l2_probe,
+    evaluate_perplexity,
+    perplexity,
+)

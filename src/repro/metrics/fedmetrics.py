@@ -1,0 +1,61 @@
+"""Federated training monitors (§6.2): per-round norm tracking (the paper's divergence
+leading-indicators), perplexity evaluation, and a lightweight CSV metric logger."""
+from __future__ import annotations
+
+import csv
+import math
+import os
+from typing import Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def perplexity(loss_ce: float) -> float:
+    return float(math.exp(min(30.0, loss_ce)))
+
+
+def evaluate_perplexity(model, params, stream, batches: int = 4, batch_size: int = 4) -> float:
+    """Held-out perplexity on a validation stream (server-side evaluation, §4.2)."""
+    loss_fn = jax.jit(lambda p, b: model.loss(p, b)[1]["ce"])
+    total, n = 0.0, 0
+    for _ in range(batches):
+        tokens = jnp.asarray(stream.next_batch(batch_size))
+        total += float(loss_fn(params, {"tokens": tokens}))
+        n += 1
+    return perplexity(total / n)
+
+
+def activation_l2_probe(model, params, batch) -> float:
+    """L2 norm of output logits activations — the divergence leading indicator the
+    paper tracks (Fig 5)."""
+    logits, _, _ = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
+    return float(jnp.sqrt(jnp.mean(jnp.square(logits.astype(jnp.float32)))))
+
+
+class MetricLogger:
+    """Append-only CSV logger, one row per round/step."""
+
+    def __init__(self, path: str, fieldnames: Optional[List[str]] = None):
+        self.path = path
+        self.fieldnames = fieldnames
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._initialized = os.path.exists(path)
+
+    def log(self, row: Dict) -> None:
+        row = {k: (float(v) if hasattr(v, "item") or isinstance(v, (int, float)) else v)
+               for k, v in row.items()}
+        if self.fieldnames is None:
+            self.fieldnames = list(row.keys())
+        write_header = not self._initialized
+        with open(self.path, "a", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=self.fieldnames, extrasaction="ignore")
+            if write_header:
+                w.writeheader()
+            w.writerow(row)
+        self._initialized = True
+
+    def read(self) -> List[Dict]:
+        with open(self.path) as f:
+            return list(csv.DictReader(f))

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k routing with capacity,
+scatter-based dispatch (memory-safe for fine-grained 64-expert configs), load-balance
+auxiliary loss. Experts shard over the 'experts' logical axis (expert parallelism).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDesc, activation_fn
+
+
+def dense_ffn_desc(cfg, d_ff: int, n_copies: int = 1) -> dict:
+    d = cfg.d_model
+    dff = d_ff * n_copies
+    if cfg.activation == "silu":  # SwiGLU
+        return {
+            "w_in": ParamDesc((d, dff), (None, "ffn"), "normal"),
+            "w_gate": ParamDesc((d, dff), (None, "ffn"), "normal"),
+            "w_out": ParamDesc((dff, d), ("ffn", None), "normal", 0.02 / max(1, 2 * cfg.n_layers) ** 0.5),
+        }
+    return {
+        "w_in": ParamDesc((d, dff), (None, "ffn"), "normal"),
+        "w_out": ParamDesc((dff, d), ("ffn", None), "normal", 0.02 / max(1, 2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def dense_ffn(cfg, p: dict, x: jax.Array) -> jax.Array:
+    act = activation_fn(cfg.activation)
+    h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(x.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"].astype(x.dtype))
+
+
+def moe_ffn_desc(cfg) -> dict:
+    d = cfg.d_model
+    e = cfg.n_experts
+    dff = cfg.moe_d_ff or cfg.d_ff
+    p = {
+        "router": ParamDesc((d, e), (None, None), "normal"),
+        "w_in": ParamDesc((e, d, dff), ("experts", None, None), "normal"),
+        "w_gate": ParamDesc((e, d, dff), ("experts", None, None), "normal"),
+        "w_out": ParamDesc((e, dff, d), ("experts", None, None), "normal", 0.02 / max(1, 2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = dense_ffn_desc(cfg, dff, cfg.n_shared_experts)
+    return p
+
+
+def moe_ffn(
+    cfg, p: dict, x: jax.Array, capacity_factor: float = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balance loss scalar)."""
+    from repro.models.common import shard_hint
+
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    xt = shard_hint(x.reshape(T, D), "model", None)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (T, K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)  # renorm (deepseek)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    onehot_k = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (T, K, E)
+    tokens_per_expert = onehot_k.sum((0, 1)) / (T * K)  # f_e
+    router_prob = probs.mean(0)  # P_e
+    aux = E * jnp.sum(tokens_per_expert * router_prob)
+
+    # Capacity-based dispatch via cumsum position-in-expert + scatter.
+    if capacity_factor is None:
+        capacity_factor = getattr(cfg, "moe_capacity_factor", 1.25)
+    capacity = max(1, int(T * K * capacity_factor / E))
+    flat_idx = expert_idx.reshape(T * K)  # route slots, ordered by token then k
+    flat_gate = gate_vals.reshape(T * K)
+    oh = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)  # (T*K, E)
+    pos_in_expert = (jnp.cumsum(oh, axis=0) * oh).sum(-1) - 1  # (T*K,)
+    keep = pos_in_expert < capacity
+    safe_pos = jnp.where(keep, pos_in_expert, 0)
+
+    token_of_slot = jnp.repeat(jnp.arange(T), K)
+    contrib = jnp.where(keep, flat_gate, 0.0)
+
+    # Scatter tokens into (E, capacity, D) expert buffers. Slot arrays shard over the
+    # within-client TP ('model') axis and expert buffers shard over experts ('model'):
+    # the slot->expert scatter and expert->slot gather become the canonical MoE
+    # all-to-all instead of replicating token-slot tensors.
+    buf = jnp.zeros((E, capacity, D), x.dtype)
+    src = shard_hint(
+        xt[token_of_slot] * keep[:, None].astype(x.dtype), "model", None
+    )
+    buf = shard_hint(buf.at[flat_idx, safe_pos].add(src), "model", None, None)
+
+    act = activation_fn(cfg.activation)
+
+    @jax.checkpoint
+    def expert_ffn(buf_, w_in, w_gate, w_out):
+        # checkpointed: the (E, cap, d_ff) hiddens are recomputed in the backward
+        # pass instead of living as residuals — they are the widest buffers of
+        # fine-grained MoE layers.
+        h_in = jnp.einsum("ecd,edf->ecf", buf_, w_in)
+        h_gate = jnp.einsum("ecd,edf->ecf", buf_, w_gate)
+        h = shard_hint(act(h_gate) * h_in, "model", None, None)
+        return jnp.einsum("ecf,efd->ecd", h, w_out)
+
+    out_buf = shard_hint(
+        expert_ffn(
+            buf,
+            p["w_in"].astype(x.dtype),
+            p["w_gate"].astype(x.dtype),
+            p["w_out"].astype(x.dtype),
+        ),
+        "model", None, None,
+    )
+
+    # Combine: gather each slot's expert output, weight by gate, sum over K.
+    slot_out = shard_hint(
+        out_buf[flat_idx, safe_pos] * contrib[:, None].astype(x.dtype), "model", None
+    )  # (T*K, D)
+    yt = slot_out.reshape(T, K, D).sum(1)
+
+    if cfg.n_shared_experts:
+        yt = yt + dense_ffn(cfg, p["shared"], xt)
+
+    return yt.reshape(B, S, D), aux.astype(jnp.float32)

@@ -1,0 +1,233 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: intra-chunk "attention-like" quadratic term + inter-chunk linear
+state recurrence, giving O(S·chunk) work and an O(1)-memory decode step. The chunk scan
+is the TPU Pallas kernel target (repro.kernels.ssd_scan); this module holds the pure-jnp
+implementation used as oracle and as the lowering path on the CPU host.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDesc, rmsnorm
+
+
+def ssm_desc(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, ds, nh = cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads
+    conv_dim = di + 2 * g * ds
+    return {
+        "in_proj": ParamDesc((d, 2 * di + 2 * g * ds + nh), (None, "ffn"), "normal"),
+        "conv_w": ParamDesc((cfg.ssm_conv_width, conv_dim), (None, "ffn"), "normal", 0.2),
+        "conv_b": ParamDesc((conv_dim,), ("ffn",), "zeros"),
+        "A_log": ParamDesc((nh,), ("ssm_heads",), "ssm_a"),
+        "dt_bias": ParamDesc((nh,), ("ssm_heads",), "ssm_dt"),
+        "D_skip": ParamDesc((nh,), ("ssm_heads",), "ones"),
+        "norm_scale": ParamDesc((di,), ("ffn",), "ones"),
+        "out_proj": ParamDesc((di, d), ("ffn", None), "normal", 0.02 / max(1, 2 * cfg.n_layers) ** 0.5),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk scan (reference / oracle)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, nh, hd)
+    dt: jax.Array,  # (B, S, nh) — post-softplus
+    A: jax.Array,  # (nh,) negative
+    Bm: jax.Array,  # (B, S, G, ds)
+    Cm: jax.Array,  # (B, S, G, ds)
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # (B, nh, hd, ds)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,nh,hd), final_state (B,nh,hd,ds))."""
+    B, S, nh, hd = x.shape
+    G, ds = Bm.shape[2], Bm.shape[3]
+    if S % chunk:  # pad with dt=0 (identity dynamics, zero input contribution)
+        pad = chunk - S % chunk
+        y, final_state = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A,
+            jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            chunk,
+            initial_state,
+        )
+        return y[:, :S], final_state
+    nc = S // chunk
+    rep = nh // G
+
+    xc = x.reshape(B, nc, chunk, nh, hd)
+    dtc = dt.reshape(B, nc, chunk, nh).astype(jnp.float32)
+    Bc = jnp.repeat(Bm.reshape(B, nc, chunk, G, ds), rep, axis=3)  # (B,nc,l,nh,ds)
+    Cc = jnp.repeat(Cm.reshape(B, nc, chunk, G, ds), rep, axis=3)
+
+    dA = dtc * A.astype(jnp.float32)  # (B,nc,l,nh) negative
+    dA_cum = jnp.cumsum(dA, axis=2)  # inclusive cumulative within chunk
+    dA_total = dA_cum[:, :, -1]  # (B,nc,nh)
+
+    # ---- intra-chunk (quadratic within chunk, causal, decay-weighted) ----
+    # L[i,j] = exp(dA_cum[i] - dA_cum[j]) for j <= i  (decay from j+1..i)
+    decay = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # (B,nc,i,j,nh)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(decay), 0.0)
+    scores = jnp.einsum("bclhn,bcshn->bclsh", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    M = scores * L  # (B,nc,i,j,nh)
+    dx = xc.astype(jnp.float32) * dtc[..., None]  # dt-weighted inputs
+    y_intra = jnp.einsum("bclsh,bcshd->bclhd", M, dx)
+
+    # ---- chunk states: S_c = sum_j exp(dA_total - dA_cum[j]) B_j (dt_j x_j)^T ----
+    state_decay = jnp.exp(dA_total[:, :, None, :] - dA_cum)  # (B,nc,l,nh)
+    states = jnp.einsum(
+        "bclhn,bclhd,bclh->bchdn", Bc.astype(jnp.float32), dx, state_decay
+    )  # (B,nc,nh,hd,ds)
+
+    # ---- inter-chunk recurrence over chunks ----
+    chunk_decay = jnp.exp(dA_total)  # (B,nc,nh)
+    if initial_state is not None:
+        init = initial_state.astype(jnp.float32)
+    else:
+        # inherit x's (possibly batch-sharded) layout — a bare jnp.zeros would start
+        # the scan carry replicated and drag the whole recurrence with it
+        init = jnp.zeros_like(
+            jnp.broadcast_to(x[:, 0, :, :, None], (B, nh, hd, ds)), dtype=jnp.float32
+        )
+
+    def step(carry, inp):
+        st, dc = inp  # (B,nh,hd,ds), (B,nh)
+        new = carry * dc[:, :, None, None] + st
+        return new, carry  # emit state *before* this chunk
+
+    states_t = jnp.moveaxis(states, 1, 0)  # (nc,B,nh,hd,ds)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,B,nh)
+    final_state, prev_states = jax.lax.scan(step, init, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,nh,hd,ds)
+
+    # ---- inter-chunk contribution: y_inter[i] = exp(dA_cum[i]) C_i · state_prev ----
+    in_decay = jnp.exp(dA_cum)  # (B,nc,l,nh)
+    y_inter = jnp.einsum(
+        "bclhn,bchdn,bclh->bclhd", Cc.astype(jnp.float32), prev_states, in_decay
+    )
+
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_recurrent_step(
+    x: jax.Array,  # (B, nh, hd)
+    dt: jax.Array,  # (B, nh)
+    A: jax.Array,  # (nh,)
+    Bm: jax.Array,  # (B, G, ds)
+    Cm: jax.Array,  # (B, G, ds)
+    state: jax.Array,  # (B, nh, hd, ds) fp32
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token decode update. Returns (y (B,nh,hd), new_state)."""
+    B, nh, hd = x.shape
+    G, ds = Bm.shape[1], Bm.shape[2]
+    rep = nh // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)  # (B,nh,ds)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))  # (B,nh)
+    dx = x.astype(jnp.float32) * dtf[..., None]  # (B,nh,hd)
+    new_state = state * dA[..., None, None] + jnp.einsum("bhd,bhn->bhdn", dx, Bh)
+    y = jnp.einsum("bhdn,bhn->bhd", new_state, Ch)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(
+    xbc: jax.Array,  # (B, S, C)
+    w: jax.Array,  # (W, C)
+    b: jax.Array,  # (C,)
+    conv_state: Optional[jax.Array] = None,  # (B, W-1, C) history
+) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv; returns (y, new_conv_state = last W-1 inputs)."""
+    W = w.shape[0]
+    if conv_state is None:
+        hist = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        hist = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([hist, xbc], axis=1)  # (B, S+W-1, C)
+    y = sum(xp[:, i : i + xbc.shape[1]] * w[i].astype(xbc.dtype) for i in range(W))
+    y = y + b.astype(xbc.dtype)
+    new_state = xp[:, -(W - 1) :] if W > 1 else jnp.zeros_like(hist)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def ssm_block(
+    cfg,
+    p: dict,
+    x: jax.Array,  # (B, S, D)
+    *,
+    cache: Optional[dict] = None,  # {'conv': (B,W-1,conv_dim), 'ssd': (B,nh,hd,ds)}
+    decode: bool = False,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    di, g, ds, nh, hd = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(x.dtype))
+    z, xBC, dt_raw = jnp.split(zxbcdt, [di, di + di + 2 * g * ds], axis=-1)
+
+    conv_state = cache.get("conv") if cache else None
+    xBC, new_conv_state = causal_conv1d(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+
+    x_ssm, Bm, Cm = jnp.split(xBC, [di, di + g * ds], axis=-1)
+    x_ssm = x_ssm.reshape(B, S, nh, hd)
+    Bm = Bm.reshape(B, S, g, ds)
+    Cm = Cm.reshape(B, S, g, ds)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if decode:
+        assert S == 1
+        ssd_state = cache["ssd"] if cache else jnp.zeros((B, nh, hd, ds), jnp.float32)
+        y1, new_state = ssd_recurrent_step(
+            x_ssm[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], ssd_state
+        )
+        y = y1[:, None]
+    else:
+        init = cache.get("ssd") if cache else None
+        if use_pallas:
+            from repro.kernels.ssd_scan import ops as ssd_ops
+
+            y, new_state = ssd_ops.ssd(x_ssm, dt, A, Bm, Cm, cfg.ssm_chunk, init)
+        else:
+            y, new_state = ssd_chunked(x_ssm, dt, A, Bm, Cm, cfg.ssm_chunk, init)
+
+    y = y + x_ssm * p["D_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+
+    new_cache = None
+    if cache is not None or decode:
+        new_cache = {"conv": new_conv_state, "ssd": new_state}
+    return out, new_cache
+
+
+def empty_ssm_cache(cfg, batch: int) -> dict:
+    di, g, ds, nh, hd = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    conv_dim = di + 2 * g * ds
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), jnp.bfloat16),
+        "ssd": jnp.zeros((batch, nh, hd, ds), jnp.float32),
+    }

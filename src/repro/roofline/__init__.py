@@ -1,0 +1,7 @@
+from repro.roofline.analysis import (  # noqa: F401
+    RooflineReport,
+    analyze_compiled,
+    model_flops_6nd,
+    parse_collectives,
+)
+from repro.roofline.hlo_analyzer import analyze as analyze_hlo_text  # noqa: F401

@@ -1,0 +1,335 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, so any graph with
+``lax.scan`` (layer stacks, local-step loops, grad accumulation, chunked attention/CE)
+is undercounted by the product of trip counts. This module parses the optimized HLO
+text, builds the computation call graph, and accumulates FLOPs / bytes / collective
+traffic with each while body weighted by its ``known_trip_count`` backend config.
+
+Counting rules (validated against cost_analysis() on scan-free graphs in tests):
+  dot          2 x prod(result dims) x prod(contracting dims)
+  elementwise  1 x result elements (incl. transcendentals)
+  reduce       1 x operand elements
+  bytes        operand + result bytes of every non-trivial top-level op; fusion
+               bodies contribute FLOPs but only their boundary contributes bytes
+               (fusion boundaries are the buffers that actually hit HBM)
+  collectives  result bytes (x2 for all-reduce: ring RS+AG), weighted by trip count
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"(pred|[sufc]\d+|bf16)\[([\d,]*)\]")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh", "rsqrt",
+    "sqrt", "negate", "abs", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "compare", "select", "and", "or", "xor", "not",
+    "clamp", "atan2", "cosine", "sine", "logistic", "cbrt", "erf", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "bitcast-convert",
+    "after-all", "opt-barrier", "partition-id", "replica-id", "custom-call",
+    "get-dimension-size",
+}
+COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+}
+
+
+def _parse_arrays(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        shape = [int(d) for d in dims.split(",")] if dims else []
+        out.append((dtype, shape))
+    return out
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, shape in _parse_arrays(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _type_elems(type_str: str) -> float:
+    total = 0.0
+    for _, shape in _parse_arrays(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Instruction:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, str] = field(default_factory=dict)  # name -> type
+    instrs: List[Instruction] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)  # symbol table
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\((.*)\)\s*->\s*.+\{\s*$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_COMMENT = re.compile(r"/\*.*?\*/")
+
+
+def _balanced(s: str, open_idx: int) -> int:
+    """Index of the paren matching s[open_idx]."""
+    depth = 0
+    for i in range(open_idx, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(s) - 1
+
+
+def _parse_instr(line: str) -> Optional[Instruction]:
+    s = line.strip()
+    is_root = s.startswith("ROOT ")
+    if is_root:
+        s = s[5:].lstrip()
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].strip().lstrip("%")
+    rest = s[eq + 3 :].lstrip()
+    if rest.startswith("("):  # tuple result type
+        close = _balanced(rest, 0)
+        rtype, rest2 = rest[: close + 1], rest[close + 1 :].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype, rest2 = rest[:sp], rest[sp + 1 :].lstrip()
+    par = rest2.find("(")
+    if par <= 0:
+        return None
+    opcode = rest2[:par].strip()
+    if not re.fullmatch(r"[\w\-]+", opcode):
+        return None
+    close = _balanced(rest2, par)
+    operands_str = rest2[par + 1 : close]
+    attrs = rest2[close + 1 :]
+    operands = [t.lstrip("%") for t in re.findall(r"%[\w\.\-]+", operands_str)]
+    return Instruction(name, rtype, opcode, operands, attrs, is_root)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = _COMMENT.sub("", raw.rstrip())
+        if cur is None:
+            stripped = line.strip()
+            m = _COMP_HEADER.match(stripped)
+            if m:
+                name = m.group(1).lstrip("%")
+                cur = Computation(name=name)
+                if stripped.startswith("ENTRY"):
+                    entry = name
+                for pm in re.finditer(
+                    r"([\w\.\-]+)\s*:\s*((?:\([^)]*\)|[^,()]+))", m.group(2)
+                ):
+                    cur.params[pm.group(1)] = pm.group(2)
+                    cur.types[pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        instr = _parse_instr(line)
+        if instr is not None:
+            cur.instrs.append(instr)
+            cur.types[instr.name] = instr.result_type
+    return comps, entry
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+
+def _dot_flops(instr: Instruction, comp: Computation) -> float:
+    out_elems = _type_elems(instr.result_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+    contract = 1.0
+    if m and instr.operands:
+        lhs_type = comp.types.get(instr.operands[0], "")
+        arrays = _parse_arrays(lhs_type)
+        if arrays:
+            shape = arrays[0][1]
+            for d in (m.group(1).split(",") if m.group(1) else []):
+                di = int(d)
+                if di < len(shape):
+                    contract *= shape[di]
+    return 2.0 * out_elems * contract
+
+
+def _coll_multiplier(opcode: str) -> float:
+    return 2.0 if opcode == "all-reduce" else 1.0
+
+
+def analyze(text: str, debug_rows: Optional[list] = None) -> HloCost:
+    comps, entry = parse_hlo(text)
+    cache: Dict[Tuple[str, bool], HloCost] = {}
+
+    def visit(name: str, inside_fusion: bool) -> HloCost:
+        key = (name, inside_fusion)
+        if key in cache:
+            return cache[key]
+        comp = comps.get(name)
+        total = HloCost()
+        if comp is None:
+            cache[key] = total
+            return total
+        for ins in comp.instrs:
+            op = ins.opcode
+            base = op.replace("-start", "").replace("-done", "")
+            if op.endswith("-done"):
+                continue
+            if base in COLLECTIVES:
+                b = _type_bytes(ins.result_type) * _coll_multiplier(base)
+                if base == "reduce-scatter" and ins.operands:
+                    ob = _type_bytes(comp.types.get(ins.operands[0], ""))
+                    b = ob if ob else b
+                total.collective_bytes += b
+                total.coll_by_kind[base] = total.coll_by_kind.get(base, 0.0) + b
+                total.coll_counts[base] = total.coll_counts.get(base, 0.0) + 1
+                total.bytes += _type_bytes(ins.result_type)
+                continue
+            if op == "while":
+                trips = 1.0
+                m = _TRIP.search(ins.attrs)
+                if m:
+                    trips = float(m.group(1))
+                body = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+                if body:
+                    sub = visit(body.group(1), False)
+                    total.flops += trips * sub.flops
+                    total.bytes += trips * sub.bytes
+                    total.collective_bytes += trips * sub.collective_bytes
+                    for k, v in sub.coll_by_kind.items():
+                        total.coll_by_kind[k] = total.coll_by_kind.get(k, 0.0) + trips * v
+                    for k, v in sub.coll_counts.items():
+                        total.coll_counts[k] = total.coll_counts.get(k, 0.0) + trips * v
+                continue
+            if op == "fusion":
+                result_b = _type_bytes(ins.result_type)
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.attrs)
+                if m:
+                    sub = visit(m.group(1), True)
+                    total.flops += sub.flops  # flops inside the fusion
+                    # Fusions that thread a large buffer through the loop via
+                    # dynamic-update-slice only touch the update slice: if any DUS
+                    # inside produces a buffer ~the size of the fusion result, count
+                    # the update slice instead of the whole buffer.
+                    sub_comp = comps.get(m.group(1))
+                    if sub_comp is not None:
+                        for fi in sub_comp.instrs:
+                            if (
+                                fi.opcode == "dynamic-update-slice"
+                                and len(fi.operands) > 1
+                                and _type_bytes(fi.result_type) >= 0.5 * result_b
+                            ):
+                                upd = _type_bytes(sub_comp.types.get(fi.operands[1], ""))
+                                result_b = min(result_b, max(upd, 1.0))
+                                break
+                # bytes at the fusion boundary; operands larger than 4x the result
+                # are threaded/sliced buffers — count them as slice-sized.
+                cap = max(result_b, 1.0) * 4.0
+                total.bytes += result_b + sum(
+                    min(_type_bytes(comp.types.get(o, "")), cap) for o in ins.operands
+                )
+                continue
+            if op in ("call", "async-start"):
+                m = re.search(r"(?:to_apply|called_computation)=%?([\w\.\-]+)", ins.attrs)
+                if m:
+                    sub = visit(m.group(1), inside_fusion)
+                    total.flops += sub.flops
+                    total.bytes += sub.bytes
+                    total.collective_bytes += sub.collective_bytes
+                    for k, v in sub.coll_by_kind.items():
+                        total.coll_by_kind[k] = total.coll_by_kind.get(k, 0.0) + v
+                    for k, v in sub.coll_counts.items():
+                        total.coll_counts[k] = total.coll_counts.get(k, 0.0) + v
+                continue
+            if op == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+                if m:
+                    subs = [visit(n.strip().lstrip("%"), inside_fusion)
+                            for n in m.group(1).split(",")]
+                    if subs:
+                        best = max(subs, key=lambda s: s.flops)
+                        total.flops += best.flops
+                        total.bytes += best.bytes
+                        total.collective_bytes += best.collective_bytes
+                continue
+            if op in ZERO_COST:
+                continue
+            # --- plain ops ---
+            if op == "dot":
+                total.flops += _dot_flops(ins, comp)
+            elif op == "reduce" or op == "reduce-window":
+                total.flops += sum(
+                    _type_elems(comp.types.get(o, "")) for o in ins.operands[: 1]
+                )
+            elif op in ELEMENTWISE:
+                total.flops += _type_elems(ins.result_type)
+            # bytes: only at top level (inside fusions buffers stay in registers/VMEM)
+            if not inside_fusion:
+                if op == "dynamic-update-slice":
+                    upd = (
+                        _type_bytes(comp.types.get(ins.operands[1], ""))
+                        if len(ins.operands) > 1
+                        else 0.0
+                    )
+                    total.bytes += 2.0 * upd  # read + write the touched slice only
+                elif op == "dynamic-slice":
+                    total.bytes += 2.0 * _type_bytes(ins.result_type)
+                else:
+                    total.bytes += _type_bytes(ins.result_type) + sum(
+                        _type_bytes(comp.types.get(o, "")) for o in ins.operands
+                    )
+        cache[key] = total
+        return total
+
+    if entry is None:
+        return HloCost()
+    return visit(entry, False)

@@ -1,0 +1,112 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from results/dryrun/*.json."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "granite-3-2b", "qwen3-1.7b", "mamba2-1.3b", "jamba-v0.1-52b", "deepseek-moe-16b",
+    "llama4-scout-17b-a16e", "whisper-large-v3", "chameleon-34b", "deepseek-coder-33b",
+    "gemma3-4b",
+]
+
+
+def load(results_dir: str, tag_filter: str = "", include_tagged: bool = False) -> List[Dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        name = os.path.basename(p)[: -len(".json")]
+        parts = name.split("__")
+        is_tagged = len(parts) > 4 or (len(parts) == 4 and parts[3] not in ("federated", "centralized"))
+        if is_tagged and not include_tagged:
+            continue
+        with open(p) as f:
+            r = json.load(f)
+        r["_file"] = os.path.basename(p)
+        if tag_filter and tag_filter not in r["_file"]:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def _key(r):
+    a = r.get("arch", "")
+    s = r.get("shape", "")
+    return (
+        ARCH_ORDER.index(a) if a in ARCH_ORDER else 99,
+        SHAPE_ORDER.index(s) if s in SHAPE_ORDER else 99,
+        r.get("multi_pod", False),
+        r.get("mode", ""),
+    )
+
+
+def dryrun_table(rows: List[Dict]) -> str:
+    out = [
+        "| arch | shape | mesh | mode | per-dev peak mem | compile | collectives |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=_key):
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        colls = " ".join(f"{k}:{int(v)}" for k, v in sorted(r.get("collective_counts", {}).items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {r.get('mode','serve')} "
+            f"| {fmt_bytes(r.get('peak_memory_per_device'))} "
+            f"| {r.get('compile_s', r.get('meta', {}).get('compile_s', 0)):.0f}s | {colls} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(rows: List[Dict], single_pod_only: bool = True) -> str:
+    out = [
+        "| arch | shape | mode | t_compute | t_memory | t_collective | bottleneck "
+        "| 6·N_act·D | useful-FLOP ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=_key):
+        if single_pod_only and r.get("multi_pod"):
+            continue
+        ratio = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('mode','serve')} "
+            f"| {r['t_compute_s']:.4f}s | {r['t_memory_s']:.4f}s "
+            f"| {r['t_collective_s']:.4f}s | **{r['bottleneck']}** "
+            f"| {r.get('model_flops', 0):.2e} "
+            f"| {ratio:.2f} |" if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {r.get('mode','serve')} "
+            f"| {r['t_compute_s']:.4f}s | {r['t_memory_s']:.4f}s "
+            f"| {r['t_collective_s']:.4f}s | **{r['bottleneck']}** | - | - |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--which", default="both", choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    rows = load(args.dir)
+    rows = [r for r in rows if "__" not in r["_file"].split(".json")[0].split("__", 4)[-1] or True]
+    if args.which in ("dryrun", "both"):
+        print("### Dry-run table\n")
+        print(dryrun_table(rows))
+        print()
+    if args.which in ("roofline", "both"):
+        print("### Roofline table (single-pod 16x16)\n")
+        print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Data pipeline + checkpoint substrate tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.data import (
+    MixedStream,
+    SyntheticCategoryStream,
+    build_client_streams,
+    round_batches,
+    validation_stream,
+)
+
+
+def test_stream_determinism_and_resume():
+    s1 = SyntheticCategoryStream(32, 500, category=2, bucket=1)
+    a = s1.next_batch(4)
+    b = s1.next_batch(4)
+    # replay from checkpointed state
+    s2 = SyntheticCategoryStream(32, 500, category=2, bucket=1)
+    s2.load_state_dict(s1.state_dict())
+    s1_next = s1.next_batch(2)
+    s2_next = s2.next_batch(2)
+    np.testing.assert_array_equal(s1_next, s2_next)
+    # fresh stream reproduces from scratch
+    s3 = SyntheticCategoryStream(32, 500, category=2, bucket=1)
+    np.testing.assert_array_equal(a, s3.next_batch(4))
+    assert not np.array_equal(a, b)  # stream advances
+
+
+def test_streams_disjoint_across_buckets_and_categories():
+    a = SyntheticCategoryStream(64, 1000, category=0, bucket=0).next_batch(4)
+    b = SyntheticCategoryStream(64, 1000, category=0, bucket=1).next_batch(4)
+    c = SyntheticCategoryStream(64, 1000, category=3, bucket=0).next_batch(4)
+    assert not np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_heterogeneous_clients_have_different_distributions():
+    streams = build_client_streams(4, 128, 2000, heterogeneous=True, j_max=1, seed=0)
+    hists = []
+    for s in streams:
+        toks = s.next_batch(16).ravel()
+        hists.append(np.bincount(toks, minlength=2000) / len(toks))
+    # at least one pair of clients should differ substantially (different categories)
+    dists = [np.abs(hists[i] - hists[j]).sum() for i in range(4) for j in range(i + 1, 4)]
+    assert max(dists) > 0.1
+
+
+def test_round_batches_shape():
+    streams = build_client_streams(3, 16, 100, heterogeneous=False)
+    rb = round_batches(streams, tau=5, per_client_batch=2)
+    assert rb["tokens"].shape == (5, 3, 2, 16)
+    assert rb["tokens"].dtype == np.int32
+    assert rb["tokens"].max() < 100
+
+
+def test_validation_stream_never_overlaps_clients():
+    v = validation_stream(32, 500, heterogeneous=False)
+    c = build_client_streams(2, 32, 500, heterogeneous=False)[0]
+    assert not np.array_equal(v.next_batch(4), c.next_batch(4))
+
+
+def test_mixed_stream_checkpoint_roundtrip():
+    subs = [SyntheticCategoryStream(16, 200, category=i) for i in range(3)]
+    m = MixedStream(subs, seed=7)
+    m.next_batch(5)
+    state = m.state_dict()
+    expect = m.next_batch(3)
+    subs2 = [SyntheticCategoryStream(16, 200, category=i) for i in range(3)]
+    m2 = MixedStream(subs2, seed=7)
+    m2.load_state_dict(state)
+    np.testing.assert_array_equal(m2.next_batch(3), expect)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_pytree_save_load_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": jnp.int32(7)},
+        "list": [jnp.zeros((2,)), jnp.ones((3,))],
+    }
+    p = str(tmp_path / "t.npz")
+    save_pytree(p, tree)
+    out = load_pytree(p, tree)
+    for x, y in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+
+
+def test_checkpoint_manager_resume_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    state = {"w": jnp.zeros((3,)), "round": jnp.int32(0)}
+    for rnd in range(4):
+        s = {"w": jnp.full((3,), float(rnd)), "round": jnp.int32(rnd)}
+        mgr.save_server(rnd, s, extra={"note": f"r{rnd}"})
+        mgr.save_client(rnd, 0, {"cursor": rnd * 10, "epoch": 0})
+    assert mgr.latest_round() == 3
+    loaded, manifest = mgr.load_server(3, state)
+    assert float(loaded["w"][0]) == 3.0
+    assert manifest["extra"]["note"] == "r3"
+    assert mgr.load_client(3, 0)["cursor"] == 30
+    # gc keeps only the last 2
+    kept = sorted(os.listdir(tmp_path))
+    assert kept == ["round_000002", "round_000003"]
+
+
+def test_load_rejects_shape_mismatch(tmp_path):
+    p = str(tmp_path / "t.npz")
+    save_pytree(p, {"w": jnp.zeros((3,))})
+    try:
+        load_pytree(p, {"w": jnp.zeros((4,))})
+        raise AssertionError("expected ValueError")
+    except ValueError:
+        pass
+
+
+def test_train_driver_resume_consistency(tmp_path):
+    """Auto-resume restores round bookkeeping + data cursors exactly and continues
+    training equivalently (paper §6.2). Note: XLA CPU parallel reductions are not
+    bitwise-deterministic across executions, so float comparisons are statistical —
+    the exactness assertions target the data/path state, which IS exact."""
+    from repro.launch.train import parse_args, run
+
+    common = [
+        "--arch", "photon-75m", "--reduced", "--local-steps", "2", "--clients", "2",
+        "--population", "4", "--batch", "2", "--seq-len", "32", "--eval-batches", "1",
+    ]
+    # uninterrupted 3 rounds
+    r_full = run(parse_args(common + ["--rounds", "3"]))
+    # 2 rounds, checkpoint, resume 1 more
+    ck = str(tmp_path / "ck")
+    r_part = run(parse_args(common + ["--rounds", "2", "--ckpt-dir", ck]))
+    r_resumed = run(parse_args(common + ["--rounds", "3", "--ckpt-dir", ck, "--resume"]))
+
+    # resume executed exactly the missing round, with the right round index
+    assert [h["round"] for h in r_resumed["history"]] == [2]
+    assert r_resumed["history"][0]["selected"] == r_full["history"][2]["selected"]
+    assert int(r_resumed["state"]["round"]) == 3
+
+    # training continued sanely: final loss within tolerance of the uninterrupted run
+    lf = r_full["history"][-1]["train_loss"]
+    lr = r_resumed["history"][-1]["train_loss"]
+    assert abs(lf - lr) / lf < 0.10, (lf, lr)
+
+
+def test_stream_cursor_checkpoint_roundtrip_exact(tmp_path):
+    """The data-state part of resume IS exact: cursors round-trip bit-for-bit."""
+    mgr = CheckpointManager(str(tmp_path))
+    s = SyntheticCategoryStream(16, 100, category=1, bucket=2)
+    s.next_batch(7)
+    mgr.save_client(0, 3, s.state_dict())
+    s2 = SyntheticCategoryStream(16, 100, category=1, bucket=2)
+    s2.load_state_dict(mgr.load_client(0, 3))
+    np.testing.assert_array_equal(s.next_batch(4), s2.next_batch(4))

@@ -1,0 +1,219 @@
+"""Federated optimization semantics: equivalence identities tying the paper's algorithm
+to SGD, plus outer-optimizer behaviour and hierarchical aggregation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    FederatedConfig,
+    InnerOptConfig,
+    OuterOptConfig,
+    centralized_step,
+    federated_round,
+    hierarchical_mean,
+    init_centralized_state,
+    init_federated_state,
+)
+
+# ---------------------------------------------------------------------------
+# A tiny quadratic "model": loss = ||W x - y||^2, params pytree {'w': (4,4)}
+# ---------------------------------------------------------------------------
+
+
+def quad_loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    loss = jnp.mean(jnp.square(pred - batch["y"]))
+    return loss, {"loss": loss, "grad_norm": jnp.zeros(())}
+
+
+def make_params(seed=0):
+    return {"w": jax.random.normal(jax.random.PRNGKey(seed), (4, 4))}
+
+
+def make_batches(tau, c, n=8, seed=1):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {
+        "x": jax.random.normal(k1, (tau, c, n, 4)),
+        "y": jax.random.normal(k2, (tau, c, n, 4)),
+    }
+
+
+def sgd_inner(lr=0.1, steps=10_000):
+    # plain SGD, no momentum/decay/clip for exact-equivalence tests
+    return InnerOptConfig(
+        name="sgd", lr_max=lr, weight_decay=0.0, grad_clip=1e9, warmup_steps=0,
+        total_steps=steps, alpha=1.0,
+    )
+
+
+def test_one_client_one_step_fedavg_equals_centralized_sgd():
+    """K=1, τ=1, FedAvg(η=1) must be EXACTLY one inner-optimizer step."""
+    fed = FederatedConfig(
+        clients_per_round=1, local_steps=1, inner=sgd_inner(),
+        outer=OuterOptConfig(name="fedavg", lr=1.0),
+    )
+    params = make_params()
+    batches = make_batches(1, 1)
+    state = init_federated_state(fed, params)
+    new_state, _ = federated_round(quad_loss, fed, state, batches)
+
+    c_state = init_centralized_state(fed.inner, params)
+    c_batch = {k: v[0, 0] for k, v in batches.items()}
+    c_new, _ = centralized_step(quad_loss, fed.inner, c_state, c_batch)
+
+    # SGD has momentum buffer; first step: mom = g, update = lr*g — matches
+    np.testing.assert_allclose(
+        np.asarray(new_state["params"]["w"]), np.asarray(c_new["params"]["w"]), rtol=1e-6
+    )
+
+
+def test_identical_clients_equal_single_client():
+    """All clients seeing identical data produce Δ_k identical; the average equals any
+    single client — FedAvg is then exactly local SGD (Local SGD ≡ FedAvg, §2.2)."""
+    tau, c = 5, 4
+    fed = FederatedConfig(
+        clients_per_round=c, local_steps=tau, inner=sgd_inner(),
+        outer=OuterOptConfig(name="fedavg", lr=1.0),
+    )
+    params = make_params()
+    b1 = make_batches(tau, 1)
+    batches = {k: jnp.broadcast_to(v, (tau, c) + v.shape[2:]) for k, v in b1.items()}
+    state = init_federated_state(fed, params)
+    out_multi, m_multi = federated_round(quad_loss, fed, state, batches)
+
+    fed1 = FederatedConfig(
+        clients_per_round=1, local_steps=tau, inner=sgd_inner(),
+        outer=OuterOptConfig(name="fedavg", lr=1.0),
+    )
+    out_single, _ = federated_round(quad_loss, fed1, init_federated_state(fed1, params), b1)
+
+    np.testing.assert_allclose(
+        np.asarray(out_multi["params"]["w"]),
+        np.asarray(out_single["params"]["w"]),
+        rtol=1e-5,
+    )
+    # consensus metric must be ~1 for identical deltas
+    assert float(m_multi["client_consensus"]) > 0.999
+
+
+def test_client_order_permutation_invariance():
+    tau, c = 3, 4
+    fed = FederatedConfig(
+        clients_per_round=c, local_steps=tau, inner=sgd_inner(),
+        outer=OuterOptConfig(name="fedavg", lr=1.0),
+    )
+    params = make_params()
+    batches = make_batches(tau, c)
+    perm = jnp.array([2, 0, 3, 1])
+    batches_p = {k: v[:, perm] for k, v in batches.items()}
+    s0 = init_federated_state(fed, params)
+    out_a, _ = federated_round(quad_loss, fed, s0, batches)
+    out_b, _ = federated_round(quad_loss, fed, s0, batches_p)
+    np.testing.assert_allclose(
+        np.asarray(out_a["params"]["w"]), np.asarray(out_b["params"]["w"]), rtol=1e-5
+    )
+
+
+def test_hierarchical_mean_equals_flat_mean():
+    deltas = {"w": jax.random.normal(jax.random.PRNGKey(3), (8, 4, 4))}
+    flat = jax.tree_util.tree_map(lambda x: jnp.mean(x, 0), deltas)
+    for g in (1, 2, 4, 8):
+        two = hierarchical_mean(deltas, g)
+        np.testing.assert_allclose(np.asarray(two["w"]), np.asarray(flat["w"]), rtol=1e-6)
+
+
+def test_federated_converges_on_quadratic():
+    """Multi-round federated optimization must drive the quadratic loss down."""
+    tau, c = 10, 4
+    fed = FederatedConfig(
+        clients_per_round=c, local_steps=tau,
+        inner=InnerOptConfig(name="adamw", lr_max=0.05, weight_decay=0.0,
+                             warmup_steps=0, total_steps=1000, alpha=1.0),
+        outer=OuterOptConfig(name="fedavg", lr=1.0),
+    )
+    params = make_params()
+    state = init_federated_state(fed, params)
+    step = jax.jit(lambda s, b: federated_round(quad_loss, fed, s, b))
+    losses = []
+    for r in range(8):
+        batches = make_batches(tau, c, seed=100 + r)
+        state, m = step(state, batches)
+        losses.append(float(m["train_loss_mean"]))
+    assert losses[-1] < 0.5 * losses[0], losses
+
+
+def test_fedprox_pulls_towards_global():
+    """The proximal term shrinks client drift (stable regime: μ·lr < 1)."""
+    tau, c = 20, 2
+    base = dict(clients_per_round=c, local_steps=tau, inner=sgd_inner(lr=0.01),
+                outer=OuterOptConfig(name="fedavg", lr=1.0))
+    params = make_params()
+    batches = make_batches(tau, c)
+    _, m_free = federated_round(
+        quad_loss, FederatedConfig(**base), init_federated_state(FederatedConfig(**base), params), batches
+    )
+    fed_prox = FederatedConfig(**base, fedprox_mu=20.0)
+    _, m_prox = federated_round(
+        quad_loss, fed_prox, init_federated_state(fed_prox, params), batches
+    )
+    assert float(m_prox["pseudo_grad_norm"]) < float(m_free["pseudo_grad_norm"])
+
+
+def test_dp_clip_bounds_client_deltas():
+    tau, c = 5, 4
+    fed = FederatedConfig(
+        clients_per_round=c, local_steps=tau, inner=sgd_inner(lr=0.5),
+        outer=OuterOptConfig(name="fedavg", lr=1.0), dp_clip=0.01,
+    )
+    params = make_params()
+    _, m = federated_round(quad_loss, fed, init_federated_state(fed, params), make_batches(tau, c))
+    assert float(m["client_delta_norm_mean"]) <= 0.01 + 1e-5
+
+
+def test_outer_optimizers_all_progress():
+    tau, c = 5, 4
+    params = make_params()
+    batches = make_batches(tau, c)
+    for outer in (
+        OuterOptConfig(name="fedavg", lr=1.0),
+        OuterOptConfig(name="fedmom", lr=0.7, momentum=0.9),
+        OuterOptConfig(name="fedadam", lr=0.01),
+    ):
+        fed = FederatedConfig(clients_per_round=c, local_steps=tau,
+                              inner=sgd_inner(lr=0.05), outer=outer)
+        state = init_federated_state(fed, params)
+        new_state, m = federated_round(quad_loss, fed, state, batches)
+        moved = float(
+            jnp.abs(new_state["params"]["w"] - params["w"]).sum()
+        )
+        assert moved > 0, outer.name
+        assert np.isfinite(float(m["pseudo_grad_norm"]))
+
+
+def test_keep_inner_state_carries_momentum():
+    tau, c = 3, 2
+    fed = FederatedConfig(
+        clients_per_round=c, local_steps=tau, inner=sgd_inner(lr=0.05),
+        outer=OuterOptConfig(name="fedavg", lr=1.0), keep_inner_state=True,
+    )
+    params = make_params()
+    state = init_federated_state(fed, params)
+    assert "inner" in state
+    state2, _ = federated_round(quad_loss, fed, state, make_batches(tau, c))
+    mom_norm = float(jnp.abs(state2["inner"]["mom"]["w"]).sum())
+    assert mom_norm > 0  # momentum survived the round boundary
+
+
+def test_bf16_pseudo_gradient_close_to_fp32():
+    tau, c = 5, 4
+    params = make_params()
+    batches = make_batches(tau, c)
+    outs = {}
+    for dt in ("float32", "bfloat16"):
+        fed = FederatedConfig(clients_per_round=c, local_steps=tau,
+                              inner=sgd_inner(lr=0.05),
+                              outer=OuterOptConfig(name="fedavg", lr=1.0),
+                              pseudo_grad_dtype=dt)
+        s, _ = federated_round(quad_loss, fed, init_federated_state(fed, params), batches)
+        outs[dt] = np.asarray(s["params"]["w"])
+    np.testing.assert_allclose(outs["bfloat16"], outs["float32"], rtol=0.02, atol=1e-3)

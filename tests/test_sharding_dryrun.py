@@ -1,0 +1,152 @@
+"""Sharding-spec unit tests + a reduced-mesh dry-run integration test.
+
+The dry-run test runs in a subprocess so the XLA_FLAGS device-count override never
+leaks into other tests (smoke tests must see 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import build_model
+from repro.models.common import is_desc
+from repro.sharding.specs import param_pspec
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+
+    def __init__(self, data=4, model=4):
+        self.shape = {"data": data, "model": model}
+
+
+def test_param_pspec_divisibility_rules():
+    mesh = FakeMesh(model=16)
+    # divisible dim -> sharded
+    assert param_pspec(mesh, ("ffn", None), (8192, 64)) == P("model", None)
+    # dim < axis -> replicated (no head_dim present)
+    assert param_pspec(mesh, ("kv_heads", None), (8, 64)) == P(None, None)
+    # uneven head count -> head_dim fallback (jit inputs reject GSPMD padding)
+    assert param_pspec(mesh, (None, "heads", "head_dim"), (512, 56, 128)) == P(None, None, "model")
+    # small kv head count with divisible head_dim -> fallback too
+    assert param_pspec(mesh, (None, "kv_heads", "head_dim"), (512, 8, 64)) == P(None, None, "model")
+    # stacked layer dim never sharded
+    assert param_pspec(mesh, ("layers", "ffn"), (40, 8192)) == P(None, "model")
+    # an axis used at most once
+    assert param_pspec(mesh, ("vocab", "ffn"), (4096, 4096)) == P("model", None)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_axes_tree_matches_shapes_tree(arch):
+    """The ParamDesc single-source-of-truth: axes and shape ranks always agree."""
+    model = build_model(get_config(arch))
+    descs = jax.tree_util.tree_leaves(model.desc(), is_leaf=is_desc)
+    for d in descs:
+        assert len(d.shape) == len(d.axes), d
+        for ax in d.axes:
+            assert ax is None or isinstance(ax, str)
+
+
+def test_every_arch_has_model_sharded_majority():
+    """At every full config, most parameter bytes must shard over 'model' (else a
+    16-way model group would replicate ~all params — an OOM in production)."""
+    mesh = FakeMesh(model=16)
+    for arch in ASSIGNED_ARCHS:
+        model = build_model(get_config(arch))
+        descs = jax.tree_util.tree_leaves(model.desc(), is_leaf=is_desc)
+        sharded = 0
+        total = 0
+        for d in descs:
+            n = float(np.prod(d.shape))
+            total += n
+            spec = param_pspec(mesh, d.axes, d.shape)
+            if any(s is not None for s in spec):
+                sharded += n
+        assert sharded / total > 0.9, f"{arch}: only {sharded/total:.0%} bytes sharded"
+
+
+DRYRUN_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import json
+import jax
+from jax.sharding import AxisType
+from repro.configs import get_config
+from repro.launch.steps import build_step
+from repro.roofline import analyze_compiled
+
+mesh = jax.make_mesh({mesh_shape}, {mesh_axes}, axis_types=(AxisType.Auto,) * {n_axes})
+cfg = get_config("{arch}").reduced()
+with mesh:
+    step = build_step(cfg, "{shape}", mesh, **{kw})
+    compiled = step.fn.lower(*step.args).compile()
+    rep = analyze_compiled(step.name, compiled, mesh.size, model_flops=step.model_flops)
+    print("RESULT " + json.dumps({{
+        "flops": rep.flops_per_device,
+        "coll": rep.collective_bytes_per_device,
+        "bottleneck": rep.bottleneck,
+        "mem": rep.peak_memory_per_device,
+    }}))
+"""
+
+
+def _run_dryrun(arch, shape, mesh_shape, mesh_axes, kw=None):
+    code = DRYRUN_SNIPPET.format(
+        arch=arch, shape=shape, mesh_shape=mesh_shape, mesh_axes=mesh_axes,
+        n_axes=len(eval(mesh_axes)), kw=json.dumps(kw or {}).replace("true", "True"),
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=500,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise AssertionError(out.stdout)
+
+
+@pytest.mark.parametrize(
+    "arch,shape",
+    [
+        ("granite-3-2b", "train_4k"),
+        ("deepseek-moe-16b", "train_4k"),
+        ("mamba2-1.3b", "decode_32k"),
+        ("jamba-v0.1-52b", "train_4k"),
+        ("whisper-large-v3", "prefill_32k"),
+    ],
+)
+def test_reduced_dryrun_single_pod(arch, shape):
+    """Reduced configs lower+compile on a small (4 data x 4 model) mesh and produce
+    sane roofline numbers — the cheap CI version of the 512-chip dry-run."""
+    r = _run_dryrun(arch, shape, "(4, 4)", "('data', 'model')")
+    assert r["flops"] > 0
+    assert r["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_reduced_dryrun_multi_pod():
+    r = _run_dryrun("qwen3-1.7b", "train_4k", "(2, 4, 2)", "('pod', 'data', 'model')")
+    assert r["flops"] > 0 and r["coll"] > 0
+
+
+def test_federated_vs_centralized_collective_reduction():
+    """Paper claim C7: per-token collective traffic of a federated round is far below
+    the per-step DDP baseline at equal tokens (here with τ_lowered=4; at τ=500 the
+    gap widens by 125x more)."""
+    fed = _run_dryrun("qwen3-1.7b", "train_4k", "(4, 4)", "('data', 'model')",
+                      kw={"tau_lowered": 4, "mode": "federated"})
+    cen = _run_dryrun("qwen3-1.7b", "train_4k", "(4, 4)", "('data', 'model')",
+                      kw={"mode": "centralized"})
+    fed_per_step = fed["coll"] / 4.0
+    # centralized pays a params-sized gradient all-reduce every step; federated only
+    # pays model-parallel activation traffic per step. With the reduced config the
+    # gap is modest; assert direction.
+    assert fed_per_step < cen["coll"], (fed_per_step, cen["coll"])
