@@ -9,4 +9,16 @@ from repro.core.federated import (  # noqa: F401
 )
 from repro.core.inner_opt import InnerOptConfig, cosine_lr, global_norm  # noqa: F401
 from repro.core.outer_opt import OuterOptConfig  # noqa: F401
-from repro.core.sampler import sample_round  # noqa: F401
+from repro.core.sampler import (  # noqa: F401
+    STRAGGLER_PROFILES,
+    ParticipationConfig,
+    ParticipationPlan,
+    StragglerProfile,
+    client_example_counts,
+    client_speeds,
+    dirichlet_popularity,
+    markov_availability,
+    participation_counts,
+    plan_round,
+    sample_round,
+)

@@ -86,6 +86,27 @@ def _mean_clients(tree):
     return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), tree)
 
 
+def _weigh_clients(x, weights):
+    """Broadcast a (C,) weight vector over a (C, ...) leaf: x_k ← w_k x_k."""
+    return x * weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+
+
+def _safe_weight_sum(weights):
+    return jnp.maximum(jnp.sum(weights), 1e-12)  # all-masked round → zero update
+
+
+def _weighted_mean_clients(tree, weights):
+    """Σ_k w_k x_k / Σ_k w_k over the leading client axis. With all-ones weights this
+    is bitwise-identical to ``_mean_clients`` (x·1.0 is exact, Σ1 = C exactly), which
+    is what lets the elastic round subsume the legacy flat-mean round."""
+    w_sum = _safe_weight_sum(weights)
+
+    def wmean(x):
+        return jnp.sum(_weigh_clients(x, weights), axis=0) / w_sum.astype(x.dtype)
+
+    return jax.tree_util.tree_map(wmean, tree)
+
+
 def _accum_value_and_grad(loss_fn, params, batch, n_micro: int, pre_split: bool = False):
     """value_and_grad with gradient accumulation over ``n_micro`` micro-batches,
     bounding activation memory like DDP micro-batching. With ``pre_split`` the batch
@@ -127,10 +148,26 @@ def federated_round(
     fed: FederatedConfig,
     state: Dict[str, Any],
     batches: Dict[str, jax.Array],  # leaves (τ, C, ...) — per-step per-client batches
+    client_weights: Optional[jax.Array] = None,  # (C,) elastic participation weights
     shard_clients: Optional[Callable] = None,  # sharding-constraint hook (mesh runs)
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
-    """One full federated round. Pure function of (state, batches) — jit/pjit it."""
+    """One full federated round. Pure function of (state, batches, weights) — jit it.
+
+    ``client_weights`` makes the round *elastic*: a (C,) vector of aggregation
+    weights (e.g. FedAvg data sizes from a ``ParticipationPlan``), where a zero
+    marks a dropped/straggling/unavailable client whose delta is excluded from the
+    aggregate. Because the weights are a traced array argument, any effective
+    cohort K_eff ≤ C runs inside the one compiled computation — no recompile when
+    participation changes round to round. ``None`` (and equivalently all-ones
+    weights, bitwise) reproduces the legacy flat-mean round.
+    """
     C = fed.clients_per_round
+    elastic = client_weights is not None
+    if elastic:
+        w = client_weights.astype(jnp.float32)
+        part = (w > 0).astype(jnp.float32)  # participation mask (C,)
+        eff_k = jnp.maximum(jnp.sum(part), 1.0)
+        metric_w = part / eff_k
     global_params = state["params"]
     client_params = _broadcast_clients(global_params, C)
     if shard_clients is not None:
@@ -166,7 +203,10 @@ def federated_round(
         new_params_c, new_inner_c, metrics_c = jax.vmap(one_client)(
             params_c, inner_c, batch_t
         )
-        step_metrics = {k: jnp.mean(v) for k, v in metrics_c.items()}
+        if elastic:  # don't let masked clients' losses pollute the round metrics
+            step_metrics = {k: jnp.sum(v * metric_w) for k, v in metrics_c.items()}
+        else:
+            step_metrics = {k: jnp.mean(v) for k, v in metrics_c.items()}
         return (new_params_c, new_inner_c, t + 1), step_metrics
 
     (client_params, inner_states, _), step_metrics = jax.lax.scan(
@@ -193,14 +233,25 @@ def federated_round(
             lambda d: d.astype(dt).astype(jnp.float32), deltas
         )
 
-    pseudo_grad = _mean_clients(deltas)  # THE once-per-round collective on the mesh
+    # THE once-per-round collective on the mesh (weighted when elastic)
+    if elastic:
+        pseudo_grad = _weighted_mean_clients(deltas, w)
+    else:
+        pseudo_grad = _mean_clients(deltas)
 
     rng, noise_rng = jax.random.split(state["rng"])
     if fed.dp_noise > 0.0:
+        # noise must cover the worst single client's influence on the aggregate:
+        # for the weighted mean that is max_k w_k/Σw (= 1/C when uniform), NOT
+        # 1/K_eff — with skewed data-size weights one heavy client can dominate
+        if elastic:
+            scale = fed.dp_noise * jnp.max(w) / jnp.maximum(jnp.sum(w), 1e-12)
+        else:
+            scale = fed.dp_noise / C
         leaves, treedef = jax.tree_util.tree_flatten(pseudo_grad)
         keys = jax.random.split(noise_rng, len(leaves))
         leaves = [
-            l + fed.dp_noise / C * jax.random.normal(k, l.shape, l.dtype)
+            l + scale * jax.random.normal(k, l.shape, l.dtype)
             for l, k in zip(leaves, keys)
         ]
         pseudo_grad = jax.tree_util.tree_unflatten(treedef, leaves)
@@ -212,10 +263,40 @@ def federated_round(
     # ---- federated metrics (paper Figs 7, 8) ----
     client_norms = jax.vmap(global_norm)(client_params)  # (C,)
     delta_norms = jax.vmap(global_norm)(deltas)
-    sum_sq = jnp.sum(jnp.square(delta_norms))
-    norm_of_sum_sq = jnp.square(global_norm(pseudo_grad)) * C * C
-    pairwise_dot = (norm_of_sum_sq - sum_sq) / jnp.maximum(1, C * (C - 1))
-    mean_sq_norm = sum_sq / C
+    if elastic:
+        # weighted consensus: Σw_k d_k = W·pg, so the cross terms are
+        # ||pg||²W² − Σ(w_k||d_k||)², normalized over the off-diagonal weight mass.
+        w_sum = jnp.sum(w)
+        w_sq_sum = jnp.sum(jnp.square(w))
+        sum_sq = jnp.sum(jnp.square(w * delta_norms))
+        norm_of_sum_sq = jnp.square(global_norm(pseudo_grad)) * jnp.square(w_sum)
+        # off-diagonal weight mass vanishes at K_eff=1 — the 0/ε there would amplify
+        # fp rounding into garbage, and a lone client trivially agrees with itself
+        off_diag = jnp.square(w_sum) - w_sq_sum
+        pairwise_dot = jnp.where(
+            eff_k > 1.5,
+            (norm_of_sum_sq - sum_sq) / jnp.maximum(off_diag, 1e-12),
+            sum_sq / jnp.maximum(w_sq_sum, 1e-12),
+        )
+        mean_sq_norm = sum_sq / jnp.maximum(w_sq_sum, 1e-12)
+        w_norm = w / jnp.maximum(w_sum, 1e-12)
+        weight_entropy = -jnp.sum(
+            jnp.where(w_norm > 0, w_norm * jnp.log(jnp.maximum(w_norm, 1e-30)), 0.0)
+        )
+        effective_clients = jnp.sum(part)
+        delta_norm_mean = jnp.sum(delta_norms * metric_w)
+        client_norm_mean = jnp.sum(client_norms * metric_w)
+        avg_client_norm = global_norm(_weighted_mean_clients(client_params, w))
+    else:
+        sum_sq = jnp.sum(jnp.square(delta_norms))
+        norm_of_sum_sq = jnp.square(global_norm(pseudo_grad)) * C * C
+        pairwise_dot = (norm_of_sum_sq - sum_sq) / jnp.maximum(1, C * (C - 1))
+        mean_sq_norm = sum_sq / C
+        weight_entropy = jnp.log(jnp.asarray(C, jnp.float32))
+        effective_clients = jnp.asarray(C, jnp.float32)
+        delta_norm_mean = jnp.mean(delta_norms)
+        client_norm_mean = jnp.mean(client_norms)
+        avg_client_norm = global_norm(_mean_clients(client_params))
     consensus = pairwise_dot / (mean_sq_norm + 1e-12)  # ~cosine alignment of deltas
 
     metrics = {
@@ -225,11 +306,13 @@ def federated_round(
         "applied_update_norm": step_metrics["applied_update_norm"][-1],
         "lr": step_metrics["lr"][-1],
         "pseudo_grad_norm": global_norm(pseudo_grad),
-        "client_delta_norm_mean": jnp.mean(delta_norms),
-        "client_model_norm_mean": jnp.mean(client_norms),
+        "client_delta_norm_mean": delta_norm_mean,
+        "client_model_norm_mean": client_norm_mean,
         "global_model_norm": global_norm(new_global),
-        "avg_client_model_norm": global_norm(_mean_clients(client_params)),
+        "avg_client_model_norm": avg_client_norm,
         "client_consensus": consensus,
+        "effective_clients": effective_clients,
+        "weight_entropy": weight_entropy,
     }
 
     new_state = {
@@ -284,10 +367,14 @@ def centralized_step(
 # ---------------------------------------------------------------------------
 
 
-def hierarchical_mean(deltas, n_groups: int):
+def hierarchical_mean(deltas, n_groups: int, weights: Optional[jax.Array] = None):
     """Two-phase mean: partial aggregation within node groups (Photon LLM Node islands),
     then across groups. With equal group sizes this equals the flat mean (tested); on
-    the mesh it pins the reduce-within-pod → reduce-across-pods schedule."""
+    the mesh it pins the reduce-within-pod → reduce-across-pods schedule.
+
+    With ``weights`` (C,) each island forwards Σ_k w_k Δ_k and Σ_k w_k; the server
+    divides once — algebraically identical to the weighted flat mean, so elastic
+    participation composes with sub-federation for free."""
 
     def two_level(x):
         c = x.shape[0]
@@ -296,4 +383,17 @@ def hierarchical_mean(deltas, n_groups: int):
         partial = jnp.mean(grouped, axis=1)  # within-island partial aggregation
         return jnp.mean(partial, axis=0)  # server aggregation of island results
 
-    return jax.tree_util.tree_map(two_level, deltas)
+    if weights is None:
+        return jax.tree_util.tree_map(two_level, deltas)
+
+    w = weights.astype(jnp.float32)
+    w_sum = _safe_weight_sum(w)
+
+    def two_level_weighted(x):
+        c = x.shape[0]
+        assert c % n_groups == 0, (c, n_groups)
+        grouped = _weigh_clients(x, w).reshape(n_groups, c // n_groups, *x.shape[1:])
+        partial = jnp.sum(grouped, axis=1)  # within-island weighted partial sums
+        return jnp.sum(partial, axis=0) / w_sum.astype(x.dtype)
+
+    return jax.tree_util.tree_map(two_level_weighted, deltas)

@@ -5,9 +5,22 @@ Implements Algorithm 1 faithfully: reproducible client sampling, per-round strea
 binding, local training via the jitted federated round, checkpoint/auto-resume,
 held-out validation, and the paper's norm monitors.
 
+Elastic participation (paper §7 robustness claims): ``--participation`` picks the
+client-availability model (``uniform`` | ``dirichlet`` popularity skew | ``markov``
+on/off churn), ``--dropout-rate`` injects seeded mid-round client failures, and
+``--straggler-profile`` (``none`` | ``mild`` | ``heavy``, with ``--deadline`` to
+override the cut-off) simulates hardware heterogeneity — clients that miss the round
+deadline are masked out of the aggregate. Dropped/straggling clients contribute
+zero-weight deltas inside the same jitted round, so the effective cohort varies per
+round with no recompilation. ``--client-weighting examples`` switches the aggregate
+to FedAvg data-size weighting. Per-round effective-K, weight entropy, and straggler
+counts are logged alongside the paper's norm monitors.
+
 Usage (CPU, minutes):
   PYTHONPATH=src python -m repro.launch.train --arch photon-75m --reduced \
       --rounds 4 --local-steps 8 --clients 4 --population 8
+  PYTHONPATH=src python -m repro.launch.train --reduced --rounds 2 \
+      --participation markov --dropout-rate 0.25 --straggler-profile mild
 """
 from __future__ import annotations
 
@@ -24,15 +37,22 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core import (
+    STRAGGLER_PROFILES,
     FederatedConfig,
     InnerOptConfig,
     OuterOptConfig,
+    ParticipationConfig,
     federated_round,
     init_federated_state,
-    sample_round,
+    plan_round,
 )
 from repro.data import build_client_streams, round_batches, validation_stream
-from repro.metrics import MetricLogger, evaluate_perplexity, perplexity
+from repro.metrics import (
+    MetricLogger,
+    evaluate_perplexity,
+    participation_metrics,
+    perplexity,
+)
 from repro.models import build_model
 
 
@@ -55,6 +75,25 @@ def parse_args(argv=None):
     ap.add_argument("--dp-clip", type=float, default=0.0)
     ap.add_argument("--dp-noise", type=float, default=0.0)
     ap.add_argument("--pseudo-grad-dtype", default="float32")
+    ap.add_argument(
+        "--participation", default="uniform", choices=["uniform", "dirichlet", "markov"],
+        help="client-availability model: uniform sampling, Dirichlet popularity "
+             "skew, or per-client Markov on/off churn",
+    )
+    ap.add_argument("--dirichlet-alpha", type=float, default=0.3,
+                    help="popularity concentration for --participation dirichlet")
+    ap.add_argument("--dropout-rate", type=float, default=0.0,
+                    help="per-round probability each selected client fails mid-round")
+    ap.add_argument(
+        "--straggler-profile", default="none", choices=sorted(STRAGGLER_PROFILES),
+        help="hardware-heterogeneity preset; stragglers past the deadline are masked",
+    )
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="round deadline in median-client-round units (overrides profile)")
+    ap.add_argument(
+        "--client-weighting", default="uniform", choices=["uniform", "examples"],
+        help="aggregation weights: uniform mean or FedAvg data-size (n_k) weighting",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log", default=None)
@@ -87,6 +126,19 @@ def run(args, cfg=None) -> dict:
         pseudo_grad_dtype=args.pseudo_grad_dtype,
     )
 
+    straggler = STRAGGLER_PROFILES[args.straggler_profile]
+    if args.deadline is not None:
+        straggler = dataclasses.replace(straggler, deadline=args.deadline)
+    pcfg = ParticipationConfig(
+        population=args.population,
+        clients_per_round=args.clients,
+        model=args.participation,
+        dirichlet_alpha=args.dirichlet_alpha,
+        dropout_rate=args.dropout_rate,
+        straggler=straggler,
+        weighting=args.client_weighting,
+    )
+
     # --- Photon Data Sources: one stream per population member -----------
     streams = build_client_streams(
         args.population, args.seq_len, cfg.vocab_size,
@@ -117,21 +169,28 @@ def run(args, cfg=None) -> dict:
     def loss_fn(p, b):
         return model.loss(p, b)
 
-    round_fn = jax.jit(lambda s, b: federated_round(loss_fn, fed, s, b))
+    # weights enter as a traced (K,) argument: per-round participation changes
+    # (dropouts, stragglers, K_eff < K) never trigger a recompile
+    round_fn = jax.jit(
+        lambda s, b, w: federated_round(loss_fn, fed, s, b, client_weights=w)
+    )
 
     history = []
     for rnd in range(start_round, args.rounds):
         t0 = time.time()
-        sel = sample_round(args.seed, rnd, args.population, args.clients)
+        plan = plan_round(pcfg, args.seed, rnd)
+        sel = plan.selected
         batches_np = round_batches([streams[i] for i in sel], args.local_steps, args.batch)
         batches = {k: jnp.asarray(v) for k, v in batches_np.items()}
-        state, metrics = round_fn(state, batches)
+        state, metrics = round_fn(state, batches, jnp.asarray(plan.weights))
         metrics = {k: float(v) for k, v in metrics.items()}
         metrics.update(
             round=rnd,
-            selected=",".join(map(str, sel)),
+            selected=",".join(map(str, sel)),  # slot ids, incl. zero-weight padding
+            contributors=",".join(map(str, sel[plan.mask])),  # actually aggregated
             seconds=time.time() - t0,
             train_ppl=perplexity(metrics["train_loss"]),
+            **participation_metrics(plan),
         )
         val_ppl = evaluate_perplexity(
             model, state["params"], val_stream, batches=args.eval_batches,
@@ -142,7 +201,10 @@ def run(args, cfg=None) -> dict:
         print(
             f"round {rnd}: loss={metrics['train_loss']:.4f} val_ppl={val_ppl:.2f} "
             f"pg_norm={metrics['pseudo_grad_norm']:.4f} "
-            f"consensus={metrics['client_consensus']:.3f} [{metrics['seconds']:.1f}s]"
+            f"consensus={metrics['client_consensus']:.3f} "
+            f"eff_K={plan.effective_k}/{args.clients} "
+            f"stragglers={plan.n_stragglers} dropped={plan.n_dropped} "
+            f"[{metrics['seconds']:.1f}s]"
         )
         if logger:
             logger.log(metrics)

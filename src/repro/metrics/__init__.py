@@ -1,6 +1,9 @@
 from repro.metrics.fedmetrics import (  # noqa: F401
     MetricLogger,
     activation_l2_probe,
+    effective_clients,
     evaluate_perplexity,
+    participation_metrics,
     perplexity,
+    weight_entropy,
 )

@@ -16,6 +16,41 @@ def perplexity(loss_ce: float) -> float:
     return float(math.exp(min(30.0, loss_ce)))
 
 
+# ---------------------------------------------------------------------------
+# Elastic-participation monitors (paper §7: partial participation / stragglers)
+# ---------------------------------------------------------------------------
+
+
+def effective_clients(weights) -> int:
+    """K_eff: clients with nonzero aggregation weight this round."""
+    return int(np.count_nonzero(np.asarray(weights)))
+
+
+def weight_entropy(weights) -> float:
+    """Shannon entropy (nats) of the normalized aggregation weights. log(K) means a
+    perfectly balanced round; falling entropy flags domination by few clients (the
+    data-size-skew failure mode of FedAvg weighting)."""
+    w = np.asarray(weights, np.float64)
+    w = w[w > 0]
+    if w.size == 0:
+        return 0.0
+    p = w / w.sum()
+    return float(-(p * np.log(p)).sum())
+
+
+def participation_metrics(plan) -> Dict[str, float]:
+    """Flatten a ``ParticipationPlan`` into the per-round logging row. Deliberately
+    omits a ``weight_entropy`` key: the jitted round already reports the in-round
+    value under that name, and a host-side copy would silently clobber it."""
+    return {
+        "effective_k": float(plan.effective_k),
+        "straggler_count": float(plan.n_stragglers),
+        "dropout_count": float(plan.n_dropped),
+        "unavailable_count": float(np.asarray(plan.unavailable).sum()),
+        "round_time_sim": float(plan.round_time),
+    }
+
+
 def evaluate_perplexity(model, params, stream, batches: int = 4, batch_size: int = 4) -> float:
     """Held-out perplexity on a validation stream (server-side evaluation, §4.2)."""
     loss_fn = jax.jit(lambda p, b: model.loss(p, b)[1]["ce"])

@@ -1,0 +1,56 @@
+"""Shared tier-1 fixtures and helpers.
+
+The tiny quadratic "model" (loss = ||W x - y||², params {'w': (4,4)}) is the
+workhorse of the federated-semantics tests: exact-equivalence identities are only
+provable on a model where the optimizer math is transparent. Import these from
+``conftest`` instead of redefining them per test module.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import InnerOptConfig
+
+
+def quad_loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    loss = jnp.mean(jnp.square(pred - batch["y"]))
+    return loss, {"loss": loss, "grad_norm": jnp.zeros(())}
+
+
+def make_params(seed=0):
+    return {"w": jax.random.normal(jax.random.PRNGKey(seed), (4, 4))}
+
+
+def make_batches(tau, c, n=8, seed=1):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {
+        "x": jax.random.normal(k1, (tau, c, n, 4)),
+        "y": jax.random.normal(k2, (tau, c, n, 4)),
+    }
+
+
+def sgd_inner(lr=0.1, steps=10_000):
+    # plain SGD, no momentum/decay/clip for exact-equivalence tests
+    return InnerOptConfig(
+        name="sgd", lr_max=lr, weight_decay=0.0, grad_clip=1e9, warmup_steps=0,
+        total_steps=steps, alpha=1.0,
+    )
+
+
+@pytest.fixture
+def quad_params():
+    return make_params()
+
+
+@pytest.fixture(scope="session")
+def tiny_model():
+    """One shared reduced tiny transformer (config, model, params) for tests that
+    need a real model but not a particular architecture."""
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("photon-75m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params

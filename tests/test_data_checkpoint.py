@@ -4,6 +4,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
 from repro.data import (
@@ -121,6 +122,7 @@ def test_load_rejects_shape_mismatch(tmp_path):
         pass
 
 
+@pytest.mark.slow  # three full driver runs with jit compiles (~40s CPU)
 def test_train_driver_resume_consistency(tmp_path):
     """Auto-resume restores round bookkeeping + data cursors exactly and continues
     training equivalently (paper §6.2). Note: XLA CPU parallel reductions are not

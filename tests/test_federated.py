@@ -1,8 +1,10 @@
 """Federated optimization semantics: equivalence identities tying the paper's algorithm
-to SGD, plus outer-optimizer behaviour and hierarchical aggregation."""
+to SGD, plus outer-optimizer behaviour and hierarchical aggregation. The shared tiny
+quadratic model lives in conftest.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+from conftest import make_batches, make_params, quad_loss, sgd_inner
 
 from repro.core import (
     FederatedConfig,
@@ -14,36 +16,6 @@ from repro.core import (
     init_centralized_state,
     init_federated_state,
 )
-
-# ---------------------------------------------------------------------------
-# A tiny quadratic "model": loss = ||W x - y||^2, params pytree {'w': (4,4)}
-# ---------------------------------------------------------------------------
-
-
-def quad_loss(params, batch):
-    pred = batch["x"] @ params["w"]
-    loss = jnp.mean(jnp.square(pred - batch["y"]))
-    return loss, {"loss": loss, "grad_norm": jnp.zeros(())}
-
-
-def make_params(seed=0):
-    return {"w": jax.random.normal(jax.random.PRNGKey(seed), (4, 4))}
-
-
-def make_batches(tau, c, n=8, seed=1):
-    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
-    return {
-        "x": jax.random.normal(k1, (tau, c, n, 4)),
-        "y": jax.random.normal(k2, (tau, c, n, 4)),
-    }
-
-
-def sgd_inner(lr=0.1, steps=10_000):
-    # plain SGD, no momentum/decay/clip for exact-equivalence tests
-    return InnerOptConfig(
-        name="sgd", lr_max=lr, weight_decay=0.0, grad_clip=1e9, warmup_steps=0,
-        total_steps=steps, alpha=1.0,
-    )
 
 
 def test_one_client_one_step_fedavg_equals_centralized_sgd():
@@ -119,7 +91,10 @@ def test_hierarchical_mean_equals_flat_mean():
     flat = jax.tree_util.tree_map(lambda x: jnp.mean(x, 0), deltas)
     for g in (1, 2, 4, 8):
         two = hierarchical_mean(deltas, g)
-        np.testing.assert_allclose(np.asarray(two["w"]), np.asarray(flat["w"]), rtol=1e-6)
+        # equal up to float32 reassociation of the two-phase reduction
+        np.testing.assert_allclose(
+            np.asarray(two["w"]), np.asarray(flat["w"]), rtol=1e-5, atol=1e-7
+        )
 
 
 def test_federated_converges_on_quadratic():

@@ -32,9 +32,9 @@ def _rand(key, shape, dtype):
     [
         (1, 2, 2, 64, 32, True, None),
         (2, 4, 2, 128, 64, True, None),
-        (2, 8, 1, 256, 64, True, None),  # MQA
+        pytest.param(2, 8, 1, 256, 64, True, None, marks=pytest.mark.slow),  # MQA
         (1, 4, 4, 128, 64, False, None),  # bidirectional (encoder)
-        (2, 4, 2, 256, 32, True, 64),  # sliding window
+        pytest.param(2, 4, 2, 256, 32, True, 64, marks=pytest.mark.slow),  # window
         (1, 2, 2, 96, 64, True, None),  # non-128 seq -> smaller block
     ],
 )
@@ -78,10 +78,10 @@ def test_flash_attention_q_offset_decode_tail():
 @pytest.mark.parametrize(
     "B,Hq,Hkv,S,hd,kv_len,window",
     [
-        (2, 4, 2, 256, 64, 200, None),
-        (1, 8, 8, 512, 32, 512, None),
+        pytest.param(2, 4, 2, 256, 64, 200, None, marks=pytest.mark.slow),
+        pytest.param(1, 8, 8, 512, 32, 512, None, marks=pytest.mark.slow),
         (2, 4, 1, 128, 64, 77, None),
-        (2, 4, 2, 512, 64, 400, 128),  # sliding-window decode
+        pytest.param(2, 4, 2, 512, 64, 400, 128, marks=pytest.mark.slow),  # window
     ],
 )
 def test_flash_decode_matches_ref(B, Hq, Hkv, S, hd, kv_len, window, dtype):
@@ -109,8 +109,8 @@ def test_flash_decode_matches_ref(B, Hq, Hkv, S, hd, kv_len, window, dtype):
     "B,S,nh,hd,G,ds,chunk",
     [
         (1, 64, 2, 32, 1, 16, 16),
-        (2, 128, 4, 64, 1, 32, 32),
-        (1, 128, 4, 32, 2, 16, 64),  # multi-group
+        pytest.param(2, 128, 4, 64, 1, 32, 32, marks=pytest.mark.slow),
+        pytest.param(1, 128, 4, 32, 2, 16, 64, marks=pytest.mark.slow),  # multi-group
         (1, 100, 2, 32, 1, 16, 32),  # non-multiple seq -> padding path
     ],
 )
@@ -129,6 +129,7 @@ def test_ssd_kernel_matches_naive_recurrence(B, S, nh, hd, G, ds, chunk, dtype):
     np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_n), rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.slow
 def test_ssd_initial_state_continuation():
     """Processing [first half] then [second half | state] == processing whole."""
     B, S, nh, hd, G, ds = 1, 128, 2, 32, 1, 16
@@ -149,6 +150,7 @@ def test_ssd_initial_state_continuation():
     np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full), rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_model_chunked_matches_naive():
     """The model-level jnp SSD (dry-run lowering path) against the recurrence."""
     from repro.models.ssm import ssd_chunked

@@ -1,0 +1,262 @@
+"""Elastic-participation semantics (paper §7): the weighted round subsumes the flat
+mean exactly, masking reduces to smaller cohorts, and the participation subsystem is
+pure/seeded so any round samples identically regardless of execution history."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import make_batches, make_params, quad_loss, sgd_inner
+
+from repro.core import (
+    STRAGGLER_PROFILES,
+    FederatedConfig,
+    OuterOptConfig,
+    ParticipationConfig,
+    client_example_counts,
+    dirichlet_popularity,
+    federated_round,
+    hierarchical_mean,
+    init_federated_state,
+    markov_availability,
+    participation_counts,
+    plan_round,
+    sample_round,
+)
+from repro.metrics import effective_clients, weight_entropy
+
+
+def _fed(c, tau, **kw):
+    return FederatedConfig(
+        clients_per_round=c, local_steps=tau, inner=sgd_inner(),
+        outer=OuterOptConfig(name="fedavg", lr=1.0), **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Elastic round == legacy round (the acceptance identity)
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_weight_elastic_round_bitwise_equals_flat_mean_round():
+    """All-ones weights must reproduce the legacy flat-mean round EXACTLY (bitwise):
+    the elastic path multiplies by 1.0 and divides by Σ1 = C, both exact in IEEE."""
+    tau, c = 5, 4
+    fed = _fed(c, tau)
+    params = make_params()
+    batches = make_batches(tau, c)
+    s0 = init_federated_state(fed, params)
+
+    legacy, m_legacy = jax.jit(lambda s, b: federated_round(quad_loss, fed, s, b))(
+        s0, batches
+    )
+    elastic, m_elastic = jax.jit(
+        lambda s, b, w: federated_round(quad_loss, fed, s, b, client_weights=w)
+    )(s0, batches, jnp.ones((c,), jnp.float32))
+
+    for leg, ela in zip(
+        jax.tree_util.tree_leaves(legacy["params"]),
+        jax.tree_util.tree_leaves(elastic["params"]),
+    ):
+        np.testing.assert_array_equal(np.asarray(leg), np.asarray(ela))
+    # round metrics agree too (weighted formulas reduce to the uniform ones)
+    for k in ("train_loss", "pseudo_grad_norm", "client_consensus"):
+        np.testing.assert_allclose(
+            float(m_legacy[k]), float(m_elastic[k]), rtol=1e-6, atol=1e-7
+        )
+    assert float(m_elastic["effective_clients"]) == c
+
+
+def test_mask_all_but_one_equals_single_client_round():
+    """Zero weights excise clients: only client j's delta reaches the aggregate, so
+    the update equals a C=1 round on client j's batches (weight scale is irrelevant)."""
+    tau, c, j = 4, 4, 2
+    params = make_params()
+    batches = make_batches(tau, c)
+    w = np.zeros(c, np.float32)
+    w[j] = 37.0  # any positive scale — a lone client's weight cancels
+    masked, m = federated_round(
+        quad_loss, _fed(c, tau), init_federated_state(_fed(c, tau), params), batches,
+        client_weights=jnp.asarray(w),
+    )
+
+    fed1 = _fed(1, tau)
+    single, _ = federated_round(
+        quad_loss, fed1, init_federated_state(fed1, params),
+        {k: v[:, j : j + 1] for k, v in batches.items()},
+    )
+    np.testing.assert_allclose(
+        np.asarray(masked["params"]["w"]), np.asarray(single["params"]["w"]),
+        rtol=1e-6, atol=1e-7,
+    )
+    assert float(m["effective_clients"]) == 1
+    assert float(m["client_consensus"]) == pytest.approx(1.0)  # lone client: trivial
+
+
+def test_weighted_round_is_scale_invariant():
+    tau, c = 3, 4
+    params = make_params()
+    batches = make_batches(tau, c)
+    fed = _fed(c, tau)
+    s0 = init_federated_state(fed, params)
+    w = jnp.asarray([1.0, 2.0, 0.0, 5.0], jnp.float32)
+    a, _ = federated_round(quad_loss, fed, s0, batches, client_weights=w)
+    b, _ = federated_round(quad_loss, fed, s0, batches, client_weights=w * 4.0)
+    np.testing.assert_allclose(
+        np.asarray(a["params"]["w"]), np.asarray(b["params"]["w"]), rtol=1e-5
+    )
+
+
+def test_weighted_hierarchical_mean_equals_weighted_flat_mean():
+    deltas = {"w": jax.random.normal(jax.random.PRNGKey(3), (8, 4, 4))}
+    w = jnp.asarray([3.0, 0.0, 1.0, 7.0, 2.0, 0.0, 5.0, 1.0], jnp.float32)
+    flat = jax.tree_util.tree_map(
+        lambda x: jnp.sum(x * w[:, None, None], 0) / jnp.sum(w), deltas
+    )
+    for g in (1, 2, 4, 8):
+        two = hierarchical_mean(deltas, g, weights=w)
+        np.testing.assert_allclose(
+            np.asarray(two["w"]), np.asarray(flat["w"]), rtol=1e-5, atol=1e-7
+        )
+
+
+def test_all_zero_weights_freeze_fedavg_params():
+    """A fully-failed round (every weight zero) contributes a zero pseudo-gradient:
+    under plain FedAvg the global params must not move."""
+    tau, c = 3, 2
+    fed = _fed(c, tau)
+    params = make_params()
+    out, _ = federated_round(
+        quad_loss, fed, init_federated_state(fed, params), make_batches(tau, c),
+        client_weights=jnp.zeros((c,), jnp.float32),
+    )
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]), np.asarray(params["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Sampler / availability models: determinism and statistics
+# ---------------------------------------------------------------------------
+
+
+def test_sample_round_deterministic_and_valid():
+    for r in range(5):
+        a = sample_round(7, r, 64, 16)
+        b = sample_round(7, r, 64, 16)
+        np.testing.assert_array_equal(a, b)
+        assert len(set(a.tolist())) == 16 and a.min() >= 0 and a.max() < 64
+
+
+def test_dirichlet_popularity_skews_selection():
+    probs = dirichlet_popularity(0, 32, alpha=0.1)
+    assert probs.shape == (32,) and probs.min() > 0
+    np.testing.assert_allclose(probs.sum(), 1.0, rtol=1e-9)
+    np.testing.assert_array_equal(probs, dirichlet_popularity(0, 32, alpha=0.1))
+    counts = participation_counts(0, 400, 32, 4, probs=probs)
+    uniform = participation_counts(0, 400, 32, 4)
+    # popularity-weighted visits concentrate far beyond uniform sampling noise
+    assert counts.max() > 2.0 * uniform.max()
+
+
+def test_markov_availability_matches_stationary_rate():
+    p_drop, p_join = 0.2, 0.6
+    rates = [
+        markov_availability(3, r, 256, p_drop, p_join).mean() for r in range(0, 60, 4)
+    ]
+    target = p_join / (p_join + p_drop)
+    assert abs(float(np.mean(rates)) - target) < 0.08
+    # chains persist: availability is correlated round-to-round, not i.i.d.
+    a = markov_availability(3, 10, 256, 0.05, 0.05)
+    b = markov_availability(3, 11, 256, 0.05, 0.05)
+    assert (a == b).mean() > 0.8
+
+
+def test_example_counts_fixed_and_positive():
+    n1 = client_example_counts(5, 64)
+    n2 = client_example_counts(5, 64)
+    np.testing.assert_array_equal(n1, n2)
+    assert n1.min() >= 1 and len(np.unique(n1)) > 10  # genuinely heterogeneous
+
+
+def test_plan_round_statistics_and_invariants():
+    cfg = ParticipationConfig(
+        population=32, clients_per_round=16, model="markov", dropout_rate=0.3,
+        straggler=STRAGGLER_PROFILES["heavy"], weighting="examples",
+    )
+    drop_frac, total = [], 0
+    for r in range(30):
+        plan = plan_round(cfg, 11, r)
+        assert plan.selected.shape == (16,) and len(set(plan.selected.tolist())) == 16
+        assert plan.effective_k >= 1  # never an empty aggregate
+        assert (plan.weights[~plan.mask] == 0).all()
+        assert (plan.weights[plan.mask] > 0).all()
+        started = plan.mask | plan.stragglers
+        if started.sum():
+            drop_frac.append(plan.n_dropped / max(1, plan.n_dropped + started.sum()))
+        total += plan.effective_k
+    assert 0.15 < float(np.mean(drop_frac)) < 0.45  # dropout rate within noise
+    assert total < 30 * 16  # heterogeneity actually removed clients
+
+
+def test_straggler_cut_respects_deadline_and_speeds():
+    cfg_cut = ParticipationConfig(
+        population=16, clients_per_round=16,
+        straggler=STRAGGLER_PROFILES["heavy"],
+    )
+    cfg_wait = ParticipationConfig(
+        population=16, clients_per_round=16,
+        straggler=type(STRAGGLER_PROFILES["heavy"])("wait", 0.8, 0.0),  # no deadline
+    )
+    plan_cut = plan_round(cfg_cut, 2, 0)
+    plan_wait = plan_round(cfg_wait, 2, 0)
+    assert plan_wait.n_stragglers == 0 and plan_wait.effective_k == 16
+    # cut rounds finish at the deadline; wait-for-all rounds run as slow as the tail
+    assert plan_cut.round_time <= STRAGGLER_PROFILES["heavy"].deadline + 1e-9
+    assert plan_wait.round_time >= plan_cut.round_time
+    # every straggler is genuinely slower than the deadline
+    assert (1.0 / plan_cut.speeds[plan_cut.stragglers]
+            > STRAGGLER_PROFILES["heavy"].deadline).all()
+
+
+# ---------------------------------------------------------------------------
+# Resume semantics: round r is independent of execution history
+# ---------------------------------------------------------------------------
+
+
+def test_sample_round_independent_of_prior_rounds():
+    """Regression: sampling round r must not depend on whether rounds 0..r-1 ran."""
+    fresh = sample_round(9, 7, 40, 8)
+    replayed = None
+    for r in range(8):  # "execute" rounds 0..7 in order
+        replayed = sample_round(9, r, 40, 8)
+    np.testing.assert_array_equal(fresh, replayed)
+    # counts over n rounds == sum of independent per-round draws
+    counts = participation_counts(9, 8, 40, 8)
+    manual = np.zeros(40, np.int64)
+    for r in range(8):
+        manual[sample_round(9, r, 40, 8)] += 1
+    np.testing.assert_array_equal(counts, manual)
+
+
+def test_plan_round_independent_of_prior_rounds():
+    for model in ("uniform", "dirichlet", "markov"):
+        cfg = ParticipationConfig(
+            population=24, clients_per_round=8, model=model, dropout_rate=0.2,
+            straggler=STRAGGLER_PROFILES["mild"], weighting="examples",
+        )
+        fresh = plan_round(cfg, 13, 6)  # jump straight to round 6
+        for r in range(7):
+            replayed = plan_round(cfg, 13, r)
+        np.testing.assert_array_equal(fresh.selected, replayed.selected)
+        np.testing.assert_array_equal(fresh.mask, replayed.mask)
+        np.testing.assert_array_equal(fresh.weights, replayed.weights)
+
+
+# ---------------------------------------------------------------------------
+# Host-side metrics helpers
+# ---------------------------------------------------------------------------
+
+
+def test_participation_metric_helpers():
+    assert effective_clients([0.0, 2.0, 0.0, 1.0]) == 2
+    assert weight_entropy([1.0, 1.0, 1.0, 1.0]) == pytest.approx(np.log(4))
+    assert weight_entropy([5.0, 0.0, 0.0]) == pytest.approx(0.0)
+    assert weight_entropy([]) == 0.0

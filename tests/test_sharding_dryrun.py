@@ -77,12 +77,15 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 import json
 import jax
-from jax.sharding import AxisType
 from repro.configs import get_config
 from repro.launch.steps import build_step
 from repro.roofline import analyze_compiled
 
-mesh = jax.make_mesh({mesh_shape}, {mesh_axes}, axis_types=(AxisType.Auto,) * {n_axes})
+try:  # AxisType landed after jax 0.4.x; older versions default to Auto anyway
+    from jax.sharding import AxisType
+    mesh = jax.make_mesh({mesh_shape}, {mesh_axes}, axis_types=(AxisType.Auto,) * {n_axes})
+except ImportError:
+    mesh = jax.make_mesh({mesh_shape}, {mesh_axes})
 cfg = get_config("{arch}").reduced()
 with mesh:
     step = build_step(cfg, "{shape}", mesh, **{kw})
@@ -114,6 +117,7 @@ def _run_dryrun(arch, shape, mesh_shape, mesh_axes, kw=None):
     raise AssertionError(out.stdout)
 
 
+@pytest.mark.slow  # subprocess XLA compile per case (~10s each)
 @pytest.mark.parametrize(
     "arch,shape",
     [
@@ -132,11 +136,13 @@ def test_reduced_dryrun_single_pod(arch, shape):
     assert r["bottleneck"] in ("compute", "memory", "collective")
 
 
+@pytest.mark.slow
 def test_reduced_dryrun_multi_pod():
     r = _run_dryrun("qwen3-1.7b", "train_4k", "(2, 4, 2)", "('pod', 'data', 'model')")
     assert r["flops"] > 0 and r["coll"] > 0
 
 
+@pytest.mark.slow
 def test_federated_vs_centralized_collective_reduction():
     """Paper claim C7: per-token collective traffic of a federated round is far below
     the per-step DDP baseline at equal tokens (here with τ_lowered=4; at τ=500 the
