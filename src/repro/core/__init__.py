@@ -1,16 +1,29 @@
 """The paper's primary contribution: the Photon federated pre-training engine."""
+from repro.core.async_agg import (  # noqa: F401
+    AsyncAggConfig,
+    AsyncFederationDriver,
+    admit_delta,
+    admit_deltas,
+    flush_buffer,
+    init_async_state,
+    staleness_discount,
+)
 from repro.core.federated import (  # noqa: F401
     FederatedConfig,
+    apply_aggregate,
     centralized_step,
     federated_round,
     hierarchical_mean,
     init_centralized_state,
     init_federated_state,
+    run_clients,
 )
 from repro.core.inner_opt import InnerOptConfig, cosine_lr, global_norm  # noqa: F401
 from repro.core.outer_opt import OuterOptConfig  # noqa: F401
 from repro.core.sampler import (  # noqa: F401
     STRAGGLER_PROFILES,
+    AsyncTimeline,
+    DispatchEvent,
     ParticipationConfig,
     ParticipationPlan,
     StragglerProfile,

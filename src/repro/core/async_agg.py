@@ -1,0 +1,457 @@
+"""Asynchronous buffered aggregation — Photon's FedBuff-style aggregator.
+
+The synchronous round (``core/federated.py``) discards every straggler's work at
+the deadline: a client that misses the cut is masked to weight zero and its τ
+local steps are wasted. Photon (arXiv 2411.02908) instead runs the aggregator
+*asynchronously*: clients pull the current global model whenever they become
+free, train at their own speed, and push their pseudo-gradient whenever they
+finish — the server **buffers** incoming deltas and applies one outer update per
+``M`` buffered deltas (FedBuff, Nguyen et al. 2022). Slow clients land in later
+buffers instead of being dropped.
+
+Mapping to Photon's aggregator, implemented here:
+
+  ================================  =============================================
+  Photon / FedBuff concept          This module
+  ================================  =============================================
+  model version ``t`` on server     ``state['round']`` — bumped once per flush
+  client trains against version t'  delta *tag* ``client_round`` (the round the
+                                    pseudo-gradient was computed against)
+  staleness ``s = t − t'``          computed at admission, never trusted from the
+                                    client (a flush mid-batch increases the
+                                    staleness of later arrivals automatically)
+  staleness discount                ``w̃ = w / (1 + s)^α`` (:func:`staleness_discount`,
+                                    FedBuff's polynomial discount; α=0 disables)
+  buffer of K deltas, update at K   fixed-capacity (M, ...) delta buffer +
+                                    ``buf_count``; flush triggered at ``M``
+  stale-update rejection            ``max_staleness`` — older deltas are refused
+                                    at admission (their slot is never consumed)
+  server update on the buffer       :func:`flush_buffer` → the *same*
+                                    ``apply_aggregate`` as the sync round
+  ================================  =============================================
+
+Everything is a pure, jittable function of ``(state, deltas, tags, weights)``:
+the buffer, its weights/staleness lanes and the fill counter live inside the
+state pytree, so async training state round-trips through the checkpoint
+manager and resume is exact — the same property the sync round gets from the
+pure participation sampler.
+
+Because :func:`flush_buffer` reuses ``apply_aggregate`` and clients run the
+shared ``run_clients`` phase, the async path with ``buffer_size == K``,
+``staleness_alpha == 0`` and all clients completing in-round reproduces the
+synchronous ``federated_round`` *bitwise* (tested).
+
+The host-side event loop (:class:`AsyncFederationDriver`) replays a simulated
+timeline from the participation layer's persistent-speed straggler model
+(:class:`~repro.core.sampler.AsyncTimeline`): the heap carries (completion-time,
+params-snapshot) pairs, the jitted client phase runs when a client "finishes",
+and the admission order — hence the whole run — is a deterministic function of
+``(config, seed)``.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.federated import (
+    FederatedConfig,
+    apply_aggregate,
+    init_federated_state,
+    run_clients,
+)
+from repro.core.sampler import AsyncTimeline, ParticipationConfig
+
+
+@dataclass(frozen=True)
+class AsyncAggConfig:
+    buffer_size: int = 4  # M — deltas per outer update (FedBuff's K)
+    staleness_alpha: float = 0.5  # discount exponent; 0 = no discount
+    max_staleness: int = 0  # reject deltas older than this (0 = accept any age)
+
+    def __post_init__(self):
+        if self.buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got {self.buffer_size}")
+        if self.staleness_alpha < 0.0:
+            raise ValueError(f"staleness_alpha must be >= 0, got {self.staleness_alpha}")
+        if self.max_staleness < 0:
+            raise ValueError(f"max_staleness must be >= 0, got {self.max_staleness}")
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+
+def init_async_state(
+    fed: FederatedConfig,
+    acfg: AsyncAggConfig,
+    params,
+    rng: Optional[jax.Array] = None,
+) -> Dict[str, Any]:
+    """Server state = the sync server state + the delta buffer lanes.
+
+    ``round`` doubles as the server *model version*: it increments once per
+    flush, and arriving deltas measure their staleness against it. Buffer slots
+    beyond ``buf_count`` hold zero weight, so a partially filled buffer
+    aggregates correctly and the whole state round-trips through
+    ``checkpoint.save_pytree`` unchanged.
+    """
+    state = init_federated_state(
+        replace(fed, keep_inner_state=False), params, rng
+    )  # async clients are stateless (paper §7.8) — no persisted inner lanes
+    m = acfg.buffer_size
+    state["buffer"] = jax.tree_util.tree_map(
+        lambda p: jnp.zeros((m,) + p.shape, jnp.float32), params
+    )
+    state["buf_weights"] = jnp.zeros((m,), jnp.float32)
+    state["buf_staleness"] = jnp.zeros((m,), jnp.float32)
+    state["buf_count"] = jnp.zeros((), jnp.int32)
+    return state
+
+
+def staleness_discount(weight, staleness, alpha: float):
+    """FedBuff's polynomial staleness discount: w̃ = w / (1 + s)^α.
+
+    Monotone non-increasing in s for α ≥ 0 (property-tested); α = 0 returns the
+    weight bitwise-unchanged ((1+s)^0 = 1.0 exactly), which is what makes the
+    sync-equivalence identity exact.
+    """
+    s = jnp.maximum(staleness.astype(jnp.float32), 0.0)
+    return weight.astype(jnp.float32) / (1.0 + s) ** alpha
+
+
+# ---------------------------------------------------------------------------
+# Admission + flush — pure (state, deltas, tags, weights) → state
+# ---------------------------------------------------------------------------
+
+
+def flush_buffer(
+    fed: FederatedConfig, acfg: AsyncAggConfig, state: Dict[str, Any]
+) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    """Apply one outer update from the buffered deltas and reset the buffer.
+
+    Delegates to the sync round's ``apply_aggregate`` with the buffer as the
+    client axis and the discounted weights as the elastic weight vector —
+    weighted mean → optional DP noise → outer update → version += 1. Empty slots
+    carry zero weight, so a partial (forced) flush aggregates only what arrived.
+    """
+    core = {k: state[k] for k in ("params", "outer", "round", "rng")}
+    new_core, metrics = apply_aggregate(
+        fed, core, state["buffer"], client_weights=state["buf_weights"]
+    )
+    count = state["buf_count"].astype(jnp.float32)
+    metrics = dict(
+        metrics,
+        buffer_fill=count,
+        buffer_occupancy=count / float(acfg.buffer_size),
+        staleness_mean=jnp.sum(state["buf_staleness"]) / jnp.maximum(count, 1.0),
+        staleness_max=jnp.max(state["buf_staleness"]),
+    )
+    new_state = dict(
+        new_core,
+        buffer=state["buffer"],  # stale rows are dead: their weights are zeroed
+        buf_weights=jnp.zeros_like(state["buf_weights"]),
+        buf_staleness=jnp.zeros_like(state["buf_staleness"]),
+        buf_count=jnp.zeros_like(state["buf_count"]),
+    )
+    return new_state, metrics
+
+
+def _zero_flush_metrics(fed, acfg, state):
+    shapes = jax.eval_shape(lambda s: flush_buffer(fed, acfg, s)[1], state)
+    return jax.tree_util.tree_map(lambda sh: jnp.zeros(sh.shape, sh.dtype), shapes)
+
+
+def admit_delta(
+    fed: FederatedConfig,
+    acfg: AsyncAggConfig,
+    state: Dict[str, Any],
+    delta,  # pytree, leaves shaped like params (no client axis)
+    client_round: jax.Array,  # () int32 — the model version the delta was computed against
+    weight: jax.Array,  # () float32 — pre-discount aggregation weight (n_k or 1)
+    auto_flush: bool = True,  # static: flush in-graph (lax.cond) when the buffer fills
+) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    """Admit one client pseudo-gradient into the buffer; flush when it fills.
+
+    Staleness is derived from the round *tag*, s = server_round − client_round,
+    so a flush that happens between two admissions of one batch automatically
+    ages the later arrivals. Zero-weight arrivals (a failed client sent nothing
+    useful) and deltas staler than ``max_staleness`` are rejected without
+    consuming a slot. Pure and jittable: the flush is a ``lax.cond`` on the fill
+    counter, so admission never recompiles as the buffer state varies.
+
+    Returns ``(state, metrics)``; with ``auto_flush``, ``metrics['flushed']`` is
+    1.0 on the admission that triggered an outer update and the flush metrics
+    (pseudo_grad_norm, consensus, staleness stats, ...) are zero-filled
+    otherwise.
+
+    ``auto_flush=False`` admits without the in-graph flush; the caller watches
+    ``buf_count`` and invokes :func:`flush_buffer` as its own jitted call. The
+    event-loop driver uses this mode: a flush compiled under ``lax.cond``
+    sits in a different XLA fusion context than the straight-line sync round and
+    can drift from it by 1 ulp, while the standalone flush graph reproduces
+    ``federated_round`` *bitwise* (the sync-equivalence identity in the tests).
+    Buffers write exact copies either way — the two modes differ only in how the
+    flush is compiled, never in which deltas it aggregates.
+    """
+    staleness = jnp.maximum(
+        (state["round"] - client_round).astype(jnp.float32), 0.0
+    )
+    disc = staleness_discount(weight, staleness, acfg.staleness_alpha)
+    accept = weight > 0
+    if acfg.max_staleness > 0:
+        accept = jnp.logical_and(accept, staleness <= float(acfg.max_staleness))
+    # a full buffer rejects (never silently overwrites a slot): with auto_flush
+    # this is unreachable (the flush below resets the counter), without it the
+    # caller must flush before admitting more — visible as accepted == 0
+    accept = jnp.logical_and(accept, state["buf_count"] < acfg.buffer_size)
+
+    def _write(st):
+        idx = st["buf_count"]
+        buffer = jax.tree_util.tree_map(
+            lambda b, d: jax.lax.dynamic_update_index_in_dim(
+                b, d.astype(b.dtype), idx, 0
+            ),
+            st["buffer"],
+            delta,
+        )
+        return dict(
+            st,
+            buffer=buffer,
+            buf_weights=st["buf_weights"].at[idx].set(disc),
+            buf_staleness=st["buf_staleness"].at[idx].set(staleness),
+            buf_count=st["buf_count"] + 1,
+        )
+
+    state = jax.lax.cond(accept, _write, lambda st: st, state)
+
+    metrics = {
+        "accepted": accept.astype(jnp.float32),
+        "staleness": staleness,
+        "discounted_weight": jnp.where(accept, disc, 0.0),
+    }
+    if auto_flush:
+        zero_metrics = _zero_flush_metrics(fed, acfg, state)
+        state, flush_metrics = jax.lax.cond(
+            state["buf_count"] >= acfg.buffer_size,
+            lambda st: flush_buffer(fed, acfg, st),
+            lambda st: (st, zero_metrics),
+            state,
+        )
+        metrics.update(flush_metrics)
+        metrics["flushed"] = (flush_metrics["buffer_fill"] > 0).astype(jnp.float32)
+    metrics["buf_count"] = state["buf_count"].astype(jnp.float32)
+    return state, metrics
+
+
+def admit_deltas(
+    fed: FederatedConfig,
+    acfg: AsyncAggConfig,
+    state: Dict[str, Any],
+    deltas,  # pytree, leaves (N, ...) — N arrivals in admission order
+    client_rounds: jax.Array,  # (N,) int32 round tags
+    weights: jax.Array,  # (N,) float32 pre-discount weights
+) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    """Admit a batch of arrivals in order — the ``(state, deltas, tags, weights)
+    → state`` form of the aggregator. A ``lax.scan`` over the arrival axis, so
+    multiple flushes can fire inside one jitted call (N > M is fine); returned
+    metrics are stacked per-arrival, e.g. ``metrics['flushed']`` marks which
+    admissions triggered outer updates.
+    """
+
+    def body(st, x):
+        d, r, w = x
+        return admit_delta(fed, acfg, st, d, r, w)
+
+    return jax.lax.scan(
+        body,
+        state,
+        (deltas, client_rounds.astype(jnp.int32), weights.astype(jnp.float32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side event loop: the simulated asynchronous federation
+# ---------------------------------------------------------------------------
+
+
+class AsyncFederationDriver:
+    """Event-driven simulator of the asynchronous federation (Photon §5.3 async).
+
+    Holds ``K = pcfg.clients_per_round`` concurrent client slots. Each dispatch
+    snapshots the current global params + version; the client "runs" for its
+    simulated duration (τ local steps at 1/speed from the persistent straggler
+    model) and, on completion, the jitted client phase computes its delta
+    *against the snapshot* — slow clients therefore admit genuinely stale deltas
+    into later buffers instead of being masked to zero. The schedule is a pure
+    replay of :class:`~repro.core.sampler.AsyncTimeline`, so a run is a
+    deterministic function of ``(configs, seed)``.
+
+    ``make_batches(client_id) -> batches`` keeps the data plane outside: leaves
+    must be (τ, 1, ...) — the client axis of the shared client phase is 1 here,
+    one jitted computation reused for every completion (no recompiles).
+    """
+
+    def __init__(
+        self,
+        loss_fn: Callable,
+        fed: FederatedConfig,
+        acfg: AsyncAggConfig,
+        pcfg: ParticipationConfig,
+        make_batches: Callable[[int], Dict[str, jax.Array]],
+        *,
+        seed: int = 0,
+        params=None,
+        rng: Optional[jax.Array] = None,
+        state: Optional[Dict[str, Any]] = None,
+    ):
+        self.fed = fed
+        self.acfg = acfg
+        self.make_batches = make_batches
+        fed1 = replace(fed, clients_per_round=1, keep_inner_state=False)
+        self._client_fn = jax.jit(
+            lambda p, r, b: run_clients(loss_fn, fed1, {"params": p, "round": r}, b)
+        )
+        # write-only admits + a standalone jitted flush: the flush then compiles
+        # in the same fusion context as the sync server phase, keeping the
+        # buffer_size==K staleness_alpha==0 path bitwise-equal to federated_round
+        self._admit_fn = jax.jit(
+            lambda st, d, r, w: admit_delta(fed, acfg, st, d, r, w, auto_flush=False)
+        )
+        self._flush_fn = jax.jit(lambda st: flush_buffer(fed, acfg, st))
+        if state is None:
+            state = init_async_state(fed, acfg, params, rng)
+        self.state = state
+        self.timeline = AsyncTimeline(pcfg, seed)
+        self.sim_time = 0.0
+        self.work_completed = 0.0  # simulated client-time that reached the buffer
+        self.work_wasted = 0.0  # dropout / rejected-staleness client-time
+        self.n_dispatched = 0
+        self._heap: List[Tuple[float, int, Any, Any, int]] = []
+        self._busy: set = set()  # population client ids currently holding a slot
+        self._losses: List[float] = []  # client train losses since last flush
+        self._staleness: List[float] = []  # admitted staleness since last flush
+        for _ in range(pcfg.clients_per_round):
+            self._dispatch()
+
+    def _dispatch(self) -> None:
+        # a client can only run in one slot at a time: skip timeline entries for
+        # clients already in flight (zero simulated cost — the scheduler simply
+        # picks the next free client from the sampler stream). Termination: at
+        # refill time at most K−1 clients are busy and every wave holds K
+        # distinct clients, so a free client appears within two waves.
+        for _ in range(64 * self.timeline.cfg.clients_per_round):
+            ev = self.timeline.dispatch(self.n_dispatched)
+            self.n_dispatched += 1
+            if ev.client not in self._busy:
+                break
+        else:  # pragma: no cover — unreachable by the argument above
+            raise RuntimeError("async dispatch starved: every client busy")
+        # every dispatch holds its client for the event duration — including an
+        # unavailable client's connect probe, during which no other slot should
+        # be contacting it either
+        self._busy.add(ev.client)
+        # snapshot by reference: jax arrays are immutable, so holding the params
+        # of up to K in-flight versions costs no copies
+        snapshot = self.state["params"] if ev.completes else None
+        version = int(self.state["round"])
+        heapq.heappush(
+            self._heap, (self.sim_time + ev.duration, ev.index, ev, snapshot, version)
+        )
+
+    def step(self) -> Optional[Dict[str, float]]:
+        """Advance the timeline by one completion event; dispatch a replacement.
+
+        Returns the flush metrics row when this event's admission triggered an
+        outer update, else None.
+        """
+        finish, _, ev, snapshot, version = heapq.heappop(self._heap)
+        self.sim_time = max(self.sim_time, finish)
+        self._busy.discard(ev.client)
+        row = None
+        if ev.completes:
+            # the client trained and consumed its data either way — but when the
+            # server is certain to reject the upload (staleness is known at pop
+            # time: no flush can intervene), skip the simulation's τ-step compute
+            staleness = int(self.state["round"]) - version
+            rejected = 0 < self.acfg.max_staleness < staleness
+            batches = self.make_batches(ev.client)
+            if rejected:
+                self.work_wasted += ev.duration
+            else:
+                deltas, aux = self._client_fn(
+                    snapshot, jnp.asarray(version, jnp.int32), batches
+                )
+                delta = jax.tree_util.tree_map(lambda d: d[0], deltas)
+                self.state, m = self._admit_fn(
+                    self.state,
+                    delta,
+                    jnp.asarray(version, jnp.int32),
+                    jnp.asarray(ev.weight, jnp.float32),
+                )
+                if float(m["accepted"]) > 0:
+                    self.work_completed += ev.duration
+                    self._staleness.append(float(m["staleness"]))
+                    self._losses.append(float(aux["step_metrics"]["loss"][-1]))
+                else:  # rejected at admission: must not skew the flush row
+                    self.work_wasted += ev.duration
+            if int(self.state["buf_count"]) >= self.acfg.buffer_size:
+                self.state, fm = self._flush_fn(self.state)
+                row = self._flush_row(fm)
+        else:
+            self.work_wasted += ev.duration
+        self._dispatch()
+        return row
+
+    def _flush_row(self, flush_metrics) -> Dict[str, float]:
+        row = {k: float(v) for k, v in flush_metrics.items()}
+        row["sim_time"] = self.sim_time
+        row["train_loss_mean"] = (
+            float(jnp.mean(jnp.asarray(self._losses))) if self._losses else 0.0
+        )
+        row["admitted_staleness"] = list(self._staleness)
+        self._losses, self._staleness = [], []
+        return row
+
+    def force_flush(self) -> Optional[Dict[str, float]]:
+        """Apply a final outer update from a partially filled buffer (end of
+        run). Returns a row shaped exactly like ``step()``'s flush rows."""
+        if int(self.state["buf_count"]) == 0:
+            return None
+        self.state, m = self._flush_fn(self.state)
+        return self._flush_row(m)
+
+    def run_updates(
+        self,
+        n_updates: int,
+        on_update: Optional[Callable[[int, Dict[str, float]], None]] = None,
+        max_events: Optional[int] = None,
+    ) -> List[Dict[str, float]]:
+        """Run the event loop until ``n_updates`` outer updates have been applied.
+
+        Raises if the event budget runs out first (pathologically offline
+        populations or aggressive ``max_staleness`` rejection) — a silently
+        truncated history would corrupt any wall-clock-to-loss comparison.
+        """
+        history: List[Dict[str, float]] = []
+        budget = max_events if max_events is not None else 1000 * max(1, n_updates)
+        while len(history) < n_updates and budget > 0:
+            budget -= 1
+            row = self.step()
+            if row is not None:
+                row["update"] = len(history)
+                history.append(row)
+                if on_update is not None:
+                    on_update(len(history) - 1, row)
+        if len(history) < n_updates:
+            raise RuntimeError(
+                f"async event budget exhausted after {len(history)}/{n_updates} "
+                f"outer updates (buffer admits too rarely: mostly-offline "
+                f"population, zero weights, or max_staleness rejecting "
+                f"everything) — raise max_events or loosen the configuration"
+            )
+        return history

@@ -13,6 +13,18 @@ is a leading parameter dimension, so per-device memory matches replicated DDP wh
 round-boundary collective is the only cross-client traffic — the paper's τ×
 communication reduction, visible directly in the compiled HLO.
 
+The round is factored into two pure phases so synchronous and asynchronous
+aggregation share one client code path:
+
+  - :func:`run_clients`   — steps 1–3 (broadcast → τ local steps → post-processed
+    pseudo-gradients). Used verbatim by the sync round and by the FedBuff-style
+    async buffer (``core/async_agg``), whose clients train against stale params.
+  - :func:`apply_aggregate` — steps 4–5 (ONE weighted aggregation → optional DP
+    noise → outer update). The async buffer's flush calls this same function on
+    its buffered, staleness-discounted deltas.
+  - :func:`federated_round` — the two recomposed; with all-ones (or ``None``)
+    weights this is bitwise-identical to the pre-refactor flat-mean round.
+
 The same functions drive the single-host simulator (tests, benchmarks) and the
 multi-pod dry-run (launch/dryrun.py); only the jit shardings differ.
 """
@@ -143,23 +155,28 @@ def _accum_value_and_grad(loss_fn, params, batch, n_micro: int, pre_split: bool 
     return (loss, metrics), grads
 
 
-def federated_round(
+def run_clients(
     loss_fn: Callable,  # (params, batch) -> (loss, metrics_dict)
     fed: FederatedConfig,
-    state: Dict[str, Any],
+    state: Dict[str, Any],  # needs 'params', 'round' (+ 'inner' when keep_inner_state)
     batches: Dict[str, jax.Array],  # leaves (τ, C, ...) — per-step per-client batches
     client_weights: Optional[jax.Array] = None,  # (C,) elastic participation weights
     shard_clients: Optional[Callable] = None,  # sharding-constraint hook (mesh runs)
-) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
-    """One full federated round. Pure function of (state, batches, weights) — jit it.
+) -> Tuple[Any, Dict[str, Any]]:
+    """Client phase of a federated round (Algorithm 1, L.4–7): broadcast θ_global
+    over the client axis, τ local inner-optimizer steps per client (no cross-client
+    collectives), then per-client pseudo-gradients Δ_k = θ_global − θ_k with DP
+    clipping and uplink quantization applied.
 
-    ``client_weights`` makes the round *elastic*: a (C,) vector of aggregation
-    weights (e.g. FedAvg data sizes from a ``ParticipationPlan``), where a zero
-    marks a dropped/straggling/unavailable client whose delta is excluded from the
-    aggregate. Because the weights are a traced array argument, any effective
-    cohort K_eff ≤ C runs inside the one compiled computation — no recompile when
-    participation changes round to round. ``None`` (and equivalently all-ones
-    weights, bitwise) reproduces the legacy flat-mean round.
+    Pure in ``(state, batches, weights)``; shared verbatim by the synchronous round
+    and the async buffered path (``core/async_agg``), so the two aggregation
+    schedules can never drift apart in client semantics. In the async path the
+    caller passes a *stale* ``state`` (the params snapshot the client was
+    dispatched with), which is exactly how a buffered delta acquires staleness.
+
+    Returns ``(deltas, aux)``: ``deltas`` leaves are (C, ...) float32
+    pseudo-gradients ready for aggregation; ``aux`` carries the per-client inner
+    states plus the client-side metric pieces consumed by ``federated_round``.
     """
     C = fed.clients_per_round
     elastic = client_weights is not None
@@ -213,6 +230,18 @@ def federated_round(
         local_step, (client_params, inner_states, jnp.zeros((), jnp.int32)), batches
     )
 
+    if fed.keep_inner_state and elastic:
+        # masked clients never actually ran this round: keep their previous inner
+        # state instead of the τ steps of stale-data Adam statistics the masked
+        # lanes of the scan just produced. (All-ones weights: where(True, new, _)
+        # returns `new` exactly, preserving the bitwise flat-round identity.)
+        keep = client_weights > 0
+
+        def _restore(new, old):
+            return jnp.where(keep.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+
+        inner_states = jax.tree_util.tree_map(_restore, inner_states, state["inner"])
+
     # ---- pseudo-gradients + post-processing (Algorithm 1, L.7 & L.26) ----
     deltas = jax.tree_util.tree_map(
         lambda g, c: g[None].astype(jnp.float32) - c.astype(jnp.float32),
@@ -233,11 +262,58 @@ def federated_round(
             lambda d: d.astype(dt).astype(jnp.float32), deltas
         )
 
+    # client-side metric pieces (paper Figs 7, 8)
+    client_norms = jax.vmap(global_norm)(client_params)  # (C,)
+    if elastic:
+        client_norm_mean = jnp.sum(client_norms * metric_w)
+        avg_client_norm = global_norm(_weighted_mean_clients(client_params, w))
+    else:
+        client_norm_mean = jnp.mean(client_norms)
+        avg_client_norm = global_norm(_mean_clients(client_params))
+
+    aux = {
+        "inner": inner_states,
+        "step_metrics": step_metrics,
+        "client_model_norm_mean": client_norm_mean,
+        "avg_client_model_norm": avg_client_norm,
+    }
+    return deltas, aux
+
+
+def apply_aggregate(
+    fed: FederatedConfig,
+    state: Dict[str, Any],  # needs 'params', 'outer', 'round', 'rng'
+    deltas,  # pytree with leading client/buffer axis (C, ...) — pseudo-gradients
+    client_weights: Optional[jax.Array] = None,  # (C,) aggregation weights
+) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    """Server phase of a federated round (Algorithm 1, L.8–9): ONE weighted
+    aggregation of the pseudo-gradients (the round's single cross-client
+    collective), optional DP noise on the aggregate, and the outer-optimizer
+    update. Pure in ``(state, deltas, weights)`` — jit it.
+
+    The leading axis of ``deltas`` need not be a synchronous cohort: the async
+    aggregator's flush (``core/async_agg.flush_buffer``) calls this exact function
+    on its delta *buffer* with staleness-discounted weights, which is what keeps
+    the sync and async server updates algebraically (and, at matched inputs,
+    bitwise) identical.
+    """
+    elastic = client_weights is not None
+    if elastic:
+        w = client_weights.astype(jnp.float32)
+        part = (w > 0).astype(jnp.float32)
+        eff_k = jnp.maximum(jnp.sum(part), 1.0)
+        metric_w = part / eff_k
+    global_params = state["params"]
+
     # THE once-per-round collective on the mesh (weighted when elastic)
     if elastic:
         pseudo_grad = _weighted_mean_clients(deltas, w)
     else:
         pseudo_grad = _mean_clients(deltas)
+
+    # the leading axis is the cohort for the sync round but the *buffer* for the
+    # async flush — size it from the data, not from fed.clients_per_round
+    C = jax.tree_util.tree_leaves(deltas)[0].shape[0]
 
     rng, noise_rng = jax.random.split(state["rng"])
     if fed.dp_noise > 0.0:
@@ -260,8 +336,7 @@ def federated_round(
         fed.outer, global_params, pseudo_grad, state["outer"]
     )
 
-    # ---- federated metrics (paper Figs 7, 8) ----
-    client_norms = jax.vmap(global_norm)(client_params)  # (C,)
+    # ---- aggregation metrics (paper Figs 7, 8) ----
     delta_norms = jax.vmap(global_norm)(deltas)
     if elastic:
         # weighted consensus: Σw_k d_k = W·pg, so the cross terms are
@@ -285,8 +360,6 @@ def federated_round(
         )
         effective_clients = jnp.sum(part)
         delta_norm_mean = jnp.sum(delta_norms * metric_w)
-        client_norm_mean = jnp.sum(client_norms * metric_w)
-        avg_client_norm = global_norm(_weighted_mean_clients(client_params, w))
     else:
         sum_sq = jnp.sum(jnp.square(delta_norms))
         norm_of_sum_sq = jnp.square(global_norm(pseudo_grad)) * C * C
@@ -295,21 +368,12 @@ def federated_round(
         weight_entropy = jnp.log(jnp.asarray(C, jnp.float32))
         effective_clients = jnp.asarray(C, jnp.float32)
         delta_norm_mean = jnp.mean(delta_norms)
-        client_norm_mean = jnp.mean(client_norms)
-        avg_client_norm = global_norm(_mean_clients(client_params))
     consensus = pairwise_dot / (mean_sq_norm + 1e-12)  # ~cosine alignment of deltas
 
     metrics = {
-        "train_loss": step_metrics["loss"][-1],
-        "train_loss_mean": jnp.mean(step_metrics["loss"]),
-        "client_grad_norm": step_metrics["grad_norm"][-1],
-        "applied_update_norm": step_metrics["applied_update_norm"][-1],
-        "lr": step_metrics["lr"][-1],
         "pseudo_grad_norm": global_norm(pseudo_grad),
         "client_delta_norm_mean": delta_norm_mean,
-        "client_model_norm_mean": client_norm_mean,
         "global_model_norm": global_norm(new_global),
-        "avg_client_model_norm": avg_client_norm,
         "client_consensus": consensus,
         "effective_clients": effective_clients,
         "weight_entropy": weight_entropy,
@@ -321,8 +385,50 @@ def federated_round(
         "round": state["round"] + 1,
         "rng": rng,
     }
+    return new_state, metrics
+
+
+def federated_round(
+    loss_fn: Callable,  # (params, batch) -> (loss, metrics_dict)
+    fed: FederatedConfig,
+    state: Dict[str, Any],
+    batches: Dict[str, jax.Array],  # leaves (τ, C, ...) — per-step per-client batches
+    client_weights: Optional[jax.Array] = None,  # (C,) elastic participation weights
+    shard_clients: Optional[Callable] = None,  # sharding-constraint hook (mesh runs)
+) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    """One full federated round — :func:`run_clients` composed with
+    :func:`apply_aggregate`. Pure function of (state, batches, weights) — jit it.
+
+    ``client_weights`` makes the round *elastic*: a (C,) vector of aggregation
+    weights (e.g. FedAvg data sizes from a ``ParticipationPlan``), where a zero
+    marks a dropped/straggling/unavailable client whose delta is excluded from the
+    aggregate. Because the weights are a traced array argument, any effective
+    cohort K_eff ≤ C runs inside the one compiled computation — no recompile when
+    participation changes round to round. ``None`` (and equivalently all-ones
+    weights, bitwise) reproduces the legacy flat-mean round.
+    """
+    deltas, aux = run_clients(
+        loss_fn, fed, state, batches,
+        client_weights=client_weights, shard_clients=shard_clients,
+    )
+    new_state, agg_metrics = apply_aggregate(
+        fed, state, deltas, client_weights=client_weights
+    )
+
+    step_metrics = aux["step_metrics"]
+    metrics = {
+        "train_loss": step_metrics["loss"][-1],
+        "train_loss_mean": jnp.mean(step_metrics["loss"]),
+        "client_grad_norm": step_metrics["grad_norm"][-1],
+        "applied_update_norm": step_metrics["applied_update_norm"][-1],
+        "lr": step_metrics["lr"][-1],
+        "client_model_norm_mean": aux["client_model_norm_mean"],
+        "avg_client_model_norm": aux["avg_client_model_norm"],
+        **agg_metrics,
+    }
+
     if fed.keep_inner_state:
-        new_state["inner"] = inner_states
+        new_state["inner"] = aux["inner"]
     return new_state, metrics
 
 

@@ -32,7 +32,7 @@ recompilation.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Optional
 
 import numpy as np
@@ -220,6 +220,10 @@ class ParticipationPlan:
     dropped: np.ndarray  # (K,) bool — mid-round dropout casualties
     stragglers: np.ndarray  # (K,) bool — missed the round deadline
     round_time: float  # simulated wall-clock, median-client-round units
+    times: np.ndarray = None  # (K,) float64 — UNCAPPED per-slot completion time
+    # (τ local steps at 1/speed, median-client-round units). The sync round caps
+    # this at the deadline and discards the tail; the async aggregator replays it
+    # as an event timeline, so slow clients land in later buffers instead.
 
     @property
     def effective_k(self) -> int:
@@ -327,4 +331,74 @@ def plan_round(cfg: ParticipationConfig, seed: int, round_idx: int) -> Participa
         dropped=dropped,
         stragglers=stragglers,
         round_time=round_time,
+        times=times,
     )
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous dispatch schedule (FedBuff-style aggregation, core/async_agg.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DispatchEvent:
+    """One simulated client dispatch resolved by :class:`AsyncTimeline`."""
+
+    index: int  # global dispatch counter n
+    wave: int  # participation wave (= plan_round index) this slot came from
+    slot: int  # slot within the wave's cohort
+    client: int  # population client id
+    weight: float  # pre-discount FedAvg aggregation weight (n_k or 1)
+    duration: float  # simulated busy time, median-client-round units
+    completes: bool  # False: never produced a delta (unavailable / dropped out)
+
+
+class AsyncTimeline:
+    """Deterministic dispatch schedule for the async aggregator.
+
+    The async server keeps ``K = clients_per_round`` client slots busy: whenever
+    a slot frees (its client completed, dropped out, or was unavailable), the
+    next client is dispatched. Dispatch ``n`` resolves through the *same* pure
+    participation layer as the sync round — wave ``n // K`` is ``plan_round(cfg,
+    seed, n // K)``, slot ``n % K`` — so the n-th dispatch is a function of
+    ``(cfg, seed, n)`` alone and a resumed run replays the identical timeline.
+
+    The sync round's straggler deadline is deliberately stripped: under async
+    aggregation a slow client *finishes late* (its completion time comes from the
+    uncapped ``plan.times``) rather than being cut, which is the whole point of
+    buffered aggregation. Speed heterogeneity, availability, data-size weights
+    and mid-round dropout all still apply. Unavailable slots cost a small
+    connection-attempt time so a mostly-offline population cannot spin the event
+    loop at zero simulated cost.
+    """
+
+    CONNECT_COST = 0.05  # failed-dispatch probe, median-client-round units
+
+    def __init__(self, cfg: ParticipationConfig, seed: int):
+        self.cfg = replace(cfg, straggler=replace(cfg.straggler, deadline=0.0))
+        self.seed = seed
+        self._plan_cache: Dict[int, ParticipationPlan] = {}
+
+    def plan(self, wave: int) -> ParticipationPlan:
+        if wave not in self._plan_cache:
+            if len(self._plan_cache) > 4:  # slots free in order: old waves are dead
+                self._plan_cache.clear()
+            self._plan_cache[wave] = plan_round(self.cfg, self.seed, wave)
+        return self._plan_cache[wave]
+
+    def dispatch(self, n: int) -> DispatchEvent:
+        wave, slot = divmod(n, self.cfg.clients_per_round)
+        plan = self.plan(wave)
+        client = int(plan.selected[slot])
+        if plan.unavailable[slot]:
+            return DispatchEvent(n, wave, slot, client, 0.0, self.CONNECT_COST, False)
+        if plan.dropped[slot]:
+            # mid-run failure: the slot is held for half the client's duration,
+            # then freed with nothing to show for it
+            return DispatchEvent(
+                n, wave, slot, client, 0.0, 0.5 * float(plan.times[slot]), False
+            )
+        return DispatchEvent(
+            n, wave, slot, client,
+            float(plan.weights[slot]), float(plan.times[slot]), True,
+        )

@@ -26,6 +26,9 @@ def main() -> None:
     ap.add_argument("--tau-lowered", type=int, default=4)
     ap.add_argument("--train-mode", default="federated", choices=["federated", "centralized", "both"])
     ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-elastic", action="store_true",
+                    help="drop the (C,) participation-weight input from the "
+                         "federated round (legacy flat-mean lowering)")
     ap.add_argument("--pseudo-grad-dtype", default="float32")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="", help="suffix for result filenames (perf iters)")
@@ -78,6 +81,7 @@ def main() -> None:
                                 remat=not args.no_remat,
                                 mode=mode,
                                 pseudo_grad_dtype=args.pseudo_grad_dtype,
+                                elastic=not args.no_elastic,
                             )
                         with mesh:
                             step = build_step(cfg, shape_name, mesh, **kw)

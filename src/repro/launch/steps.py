@@ -248,6 +248,7 @@ def build_train_step(
     mode: str = "federated",
     fed: Optional[FederatedConfig] = None,
     pseudo_grad_dtype: str = "float32",
+    elastic: bool = True,
 ) -> BuiltStep:
     model = build_model(cfg)
     loss_fn = lambda p, b: model.loss(p, b, remat=remat)
@@ -282,12 +283,19 @@ def build_train_step(
             functools.partial(federated_round, loss_fn, fed, shard_clients=shard_clients)
         )
         batches = input_specs(cfg, shape, mesh, tau_lowered=tau_lowered, mode="federated")
+        # elastic participation on the mesh: the (C,) weight vector enters the
+        # jitted round as a replicated traced input — dropouts / stragglers /
+        # K_eff < C on the production mesh never trigger a recompile, exactly
+        # like the CPU driver. All-ones weights are bitwise the flat round.
+        args = (state, batches)
+        if elastic:
+            args = args + (_sds((C,), jnp.float32, mesh, P()),)
         tokens_per_round = tau_lowered * shape.global_batch * shape.seq_len
         mf = 6.0 * cfg.active_param_count() * tokens_per_round
         return BuiltStep(
             name=f"{cfg.name}:{shape.name}:federated",
             fn=step,
-            args=(state, batches),
+            args=args,
             model_flops=mf,
             meta={
                 "tau_lowered": tau_lowered,
@@ -296,6 +304,7 @@ def build_train_step(
                 "grad_accum": ga,
                 "client_axes": list(client_ax),
                 "fsdp_axes": list(fsdp_ax),
+                "elastic": elastic,
             },
         )
 

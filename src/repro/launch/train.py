@@ -16,11 +16,25 @@ round with no recompilation. ``--client-weighting examples`` switches the aggreg
 to FedAvg data-size weighting. Per-round effective-K, weight entropy, and straggler
 counts are logged alongside the paper's norm monitors.
 
+Async buffered aggregation (Photon's FedBuff-style aggregator, arXiv 2411.02908):
+``--aggregation async`` replaces the deadline-masking synchronous round with an
+event-driven timeline — K client slots stay busy, each completed client's
+pseudo-gradient is admitted into a server-side delta buffer with a staleness
+discount ``w/(1+s)^α``, and one outer update fires per ``--buffer-size`` admitted
+deltas. Slow clients land in later buffers instead of being masked to zero, so
+under straggler-heavy profiles the simulated wall-clock per unit of aggregated
+work drops (logged as ``sim_time`` + ``wallclock_speedup`` per update, with
+staleness histograms and buffer occupancy). ``--staleness-alpha`` sets the
+discount exponent; ``--max-staleness`` rejects deltas older than that many server
+rounds.
+
 Usage (CPU, minutes):
   PYTHONPATH=src python -m repro.launch.train --arch photon-75m --reduced \
       --rounds 4 --local-steps 8 --clients 4 --population 8
   PYTHONPATH=src python -m repro.launch.train --reduced --rounds 2 \
       --participation markov --dropout-rate 0.25 --straggler-profile mild
+  PYTHONPATH=src python -m repro.launch.train --reduced --rounds 4 \
+      --aggregation async --buffer-size 2 --straggler-profile heavy
 """
 from __future__ import annotations
 
@@ -38,6 +52,8 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core import (
     STRAGGLER_PROFILES,
+    AsyncAggConfig,
+    AsyncFederationDriver,
     FederatedConfig,
     InnerOptConfig,
     OuterOptConfig,
@@ -52,6 +68,8 @@ from repro.metrics import (
     evaluate_perplexity,
     participation_metrics,
     perplexity,
+    staleness_stats,
+    wallclock_speedup,
 )
 from repro.models import build_model
 
@@ -94,6 +112,19 @@ def parse_args(argv=None):
         "--client-weighting", default="uniform", choices=["uniform", "examples"],
         help="aggregation weights: uniform mean or FedAvg data-size (n_k) weighting",
     )
+    ap.add_argument(
+        "--aggregation", default="sync", choices=["sync", "async"],
+        help="sync: deadline-masked federated rounds; async: FedBuff-style "
+             "buffered aggregation — stragglers land in later buffers with "
+             "staleness-discounted weights instead of being dropped",
+    )
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="async: deltas per outer update (M); default max(1, K//2)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="async: staleness discount exponent in w/(1+s)^alpha")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="async: reject deltas older than this many server rounds "
+                         "(0 = accept any age)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log", default=None)
@@ -148,6 +179,22 @@ def run(args, cfg=None) -> dict:
 
     # --- server state ------------------------------------------------------
     params = model.init(jax.random.PRNGKey(args.seed))
+
+    if args.aggregation == "async":
+        if args.resume:
+            raise SystemExit(
+                "--resume with --aggregation async is not supported yet: the "
+                "in-flight client queue is not checkpointed (see ROADMAP)"
+            )
+        if args.keep_opt:
+            raise SystemExit(
+                "--keep-opt with --aggregation async is not supported: async "
+                "clients are stateless (paper §7.8) — a client's next dispatch "
+                "may serve a different model version, so persisted inner Adam "
+                "state would be silently stale"
+            )
+        return _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params)
+
     state = init_federated_state(fed, params, jax.random.PRNGKey(args.seed + 1))
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
@@ -216,6 +263,101 @@ def run(args, cfg=None) -> dict:
                 ckpt.save_client(rnd, i, streams[i].state_dict())
 
     return {"history": history, "state": state, "model": model, "config": cfg}
+
+
+def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params) -> dict:
+    """Event-driven FedBuff-style training: K busy client slots, a server-side
+    delta buffer, one outer update per ``--buffer-size`` admitted deltas."""
+    acfg = AsyncAggConfig(
+        buffer_size=(
+            args.buffer_size if args.buffer_size is not None
+            else max(1, args.clients // 2)
+        ),
+        staleness_alpha=args.staleness_alpha,
+        max_staleness=args.max_staleness,
+    )
+
+    def loss_fn(p, b):
+        return model.loss(p, b)
+
+    def make_batches(cid):
+        b = round_batches([streams[cid]], args.local_steps, args.batch)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    driver = AsyncFederationDriver(
+        loss_fn, fed, acfg, pcfg, make_batches,
+        seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
+    )
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    logger = MetricLogger(args.log) if args.log else None
+
+    # reference: what the deadline-masking sync schedule pays to aggregate the
+    # same number of client deltas (cached cumulative replay of plan_round)
+    sync_cum = [(0.0, 0)]  # (cumulative sim time, cumulative aggregated deltas)
+
+    def sync_equiv_time(n_deltas: int) -> float:
+        while sync_cum[-1][1] < n_deltas and len(sync_cum) < 100_000:
+            plan = plan_round(pcfg, args.seed, len(sync_cum) - 1)
+            t, d = sync_cum[-1]
+            sync_cum.append((t + plan.round_time, d + plan.effective_k))
+        return sync_cum[-1][0] if sync_cum[-1][1] >= n_deltas else float("inf")
+
+    history = []
+    deltas_admitted = [0]
+    t_wall = [time.time()]
+
+    def on_update(i, row):
+        # mean/max staleness + buffer occupancy come in-graph from flush_buffer;
+        # the host side only adds the histogram buckets of the admitted ages
+        staleness = row.pop("admitted_staleness", [])
+        row.update(
+            (k, v)
+            for k, v in staleness_stats(staleness).items()
+            if k.startswith("staleness_hist_")
+        )
+        deltas_admitted[0] += int(row.get("buffer_fill", 0))
+        row.update(
+            update=i,
+            round=i,  # outer-update index, the async analogue of the round
+            deltas_admitted=float(deltas_admitted[0]),
+            wallclock_speedup=wallclock_speedup(
+                sync_equiv_time(deltas_admitted[0]), row["sim_time"]
+            ),
+            work_completed=driver.work_completed,
+            work_wasted=driver.work_wasted,
+            seconds=time.time() - t_wall[0],
+            train_loss=row["train_loss_mean"],
+            train_ppl=perplexity(row["train_loss_mean"]),
+        )
+        t_wall[0] = time.time()
+        row["val_ppl"] = evaluate_perplexity(
+            model, driver.state["params"], val_stream,
+            batches=args.eval_batches, batch_size=args.batch,
+        )
+        history.append(row)
+        print(
+            f"update {i}: loss={row['train_loss_mean']:.4f} "
+            f"val_ppl={row['val_ppl']:.2f} "
+            f"pg_norm={row['pseudo_grad_norm']:.4f} "
+            f"staleness={row['staleness_mean']:.2f}/{row['staleness_max']:.0f} "
+            f"buf={row['buffer_fill']:.0f}/{acfg.buffer_size} "
+            f"t_sim={row['sim_time']:.2f} "
+            f"speedup={row['wallclock_speedup']:.2f}x [{row['seconds']:.1f}s]"
+        )
+        if logger:
+            logger.log(row)
+        if ckpt:
+            # the buffer lanes live inside the state pytree, so a checkpoint
+            # taken between flushes preserves partially aggregated work
+            ckpt.save_server(i, driver.state, extra={"args": vars(args),
+                                                     "sim_time": row["sim_time"]})
+            for ci in range(args.population):
+                ckpt.save_client(i, ci, streams[ci].state_dict())
+
+    driver.run_updates(args.rounds, on_update=on_update)
+    return {"history": history, "state": driver.state, "model": model,
+            "config": cfg, "driver": driver}
 
 
 def main() -> None:

@@ -5,5 +5,7 @@ from repro.metrics.fedmetrics import (  # noqa: F401
     evaluate_perplexity,
     participation_metrics,
     perplexity,
+    staleness_stats,
+    wallclock_speedup,
     weight_entropy,
 )

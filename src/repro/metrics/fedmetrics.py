@@ -51,6 +51,43 @@ def participation_metrics(plan) -> Dict[str, float]:
     }
 
 
+# ---------------------------------------------------------------------------
+# Async-aggregation monitors (FedBuff-style buffer, core/async_agg.py)
+# ---------------------------------------------------------------------------
+
+# histogram bucket edges for delta staleness (server rounds); last bucket is open
+_STALENESS_BUCKETS = ((0, 0), (1, 1), (2, 3), (4, 7), (8, None))
+
+
+def staleness_stats(staleness: Iterable[float]) -> Dict[str, float]:
+    """Per-update staleness summary + histogram of the admitted deltas' ages.
+
+    Buckets (``staleness_hist_*``): exactly-fresh (0), one round late (1), 2–3,
+    4–7, and 8+ — a long right tail means the buffer is mostly absorbing ancient
+    work and ``max_staleness`` / a larger cohort should be considered.
+    """
+    s = np.asarray(list(staleness), np.float64)
+    out = {
+        "staleness_mean": float(s.mean()) if s.size else 0.0,
+        "staleness_max": float(s.max()) if s.size else 0.0,
+    }
+    for lo, hi in _STALENESS_BUCKETS:
+        if hi is None:
+            out[f"staleness_hist_{lo}p"] = float((s >= lo).sum())
+        elif lo == hi:
+            out[f"staleness_hist_{lo}"] = float(((s >= lo) & (s <= hi)).sum())
+        else:
+            out[f"staleness_hist_{lo}_{hi}"] = float(((s >= lo) & (s <= hi)).sum())
+    return out
+
+
+def wallclock_speedup(sync_time: float, async_time: float) -> float:
+    """Simulated wall-clock speedup of reaching the same point: how much longer
+    the deadline-masking sync schedule would have taken than the async buffered
+    schedule (> 1.0 means async wins)."""
+    return float(sync_time) / max(float(async_time), 1e-12)
+
+
 def evaluate_perplexity(model, params, stream, batches: int = 4, batch_size: int = 4) -> float:
     """Held-out perplexity on a validation stream (server-side evaluation, §4.2)."""
     loss_fn = jax.jit(lambda p, b: model.loss(p, b)[1]["ce"])

@@ -15,6 +15,7 @@ from repro.core import (
     hierarchical_mean,
     init_federated_state,
     sample_round,
+    staleness_discount,
 )
 from repro.core.inner_opt import cosine_lr, global_norm
 from repro.data import make_heterogeneous_partition, validate_disjoint
@@ -93,6 +94,45 @@ def test_cosine_lr_bounded_and_nonnegative(lr, warmup, total, alpha, step):
     assert 0.0 <= v <= lr * (1 + 1e-6)
     if step >= total:
         assert abs(v - alpha * lr) < 1e-6 * max(1, lr)
+
+
+# ---------------------------------------------------------------------------
+# Async buffered aggregation: staleness discount invariants
+# ---------------------------------------------------------------------------
+
+
+@given(
+    weight=st.floats(1e-6, 1e6),
+    s1=st.integers(0, 1000),
+    ds=st.integers(1, 1000),
+    alpha=st.floats(0.0, 4.0),
+)
+@settings(**SETTINGS)
+def test_staleness_discount_monotone_in_staleness(weight, s1, ds, alpha):
+    """w/(1+s)^α: never increasing in s, never exceeds the raw weight, always
+    positive — an old delta can only count less, never more or negatively."""
+    w = jnp.asarray(weight, jnp.float32)
+    a = float(staleness_discount(w, jnp.asarray(float(s1)), alpha))
+    b = float(staleness_discount(w, jnp.asarray(float(s1 + ds)), alpha))
+    assert b <= a <= float(w) * (1 + 1e-6)
+    assert b > 0.0
+    if alpha == 0.0:
+        assert a == b == float(w)  # exact: the sync-equivalence precondition
+
+
+@given(
+    weights=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=8),
+    alpha=st.floats(0.0, 2.0),
+)
+@settings(**SETTINGS)
+def test_staleness_discount_preserves_weight_ordering(weights, alpha):
+    """At equal staleness the discount is order-preserving in the raw weights —
+    aging the whole buffer cannot reorder which client counts most. (Weak
+    ordering: float32 division can collapse adjacent weights to equal
+    discounts, so ties are allowed.)"""
+    w = np.asarray(weights, np.float32)
+    d = np.asarray(staleness_discount(jnp.asarray(w), jnp.full(len(weights), 3.0), alpha))
+    assert (np.diff(d[np.argsort(w, kind="stable")]) >= 0).all()
 
 
 # ---------------------------------------------------------------------------

@@ -103,7 +103,8 @@ with mesh:
 def _run_dryrun(arch, shape, mesh_shape, mesh_axes, kw=None):
     code = DRYRUN_SNIPPET.format(
         arch=arch, shape=shape, mesh_shape=mesh_shape, mesh_axes=mesh_axes,
-        n_axes=len(eval(mesh_axes)), kw=json.dumps(kw or {}).replace("true", "True"),
+        n_axes=len(eval(mesh_axes)),
+        kw=json.dumps(kw or {}).replace("true", "True").replace("false", "False"),
     )
     env = dict(os.environ, PYTHONPATH=SRC)
     out = subprocess.run(
@@ -140,6 +141,24 @@ def test_reduced_dryrun_single_pod(arch, shape):
 def test_reduced_dryrun_multi_pod():
     r = _run_dryrun("qwen3-1.7b", "train_4k", "(2, 4, 2)", "('pod', 'data', 'model')")
     assert r["flops"] > 0 and r["coll"] > 0
+
+
+@pytest.mark.slow
+def test_weighted_round_compiles_under_flat_round_shardings():
+    """Mesh-elastic rounds (ROADMAP): the federated round with the (C,)
+    participation-weight input must compile on the mesh with the same memory
+    footprint, bottleneck, and (to within the weight vector's negligible
+    arithmetic) the same FLOPs and collective traffic as the legacy flat-mean
+    round — the weights ride along as a replicated traced input, they must not
+    perturb the parameter/batch shardings."""
+    flat = _run_dryrun("qwen3-1.7b", "train_4k", "(4, 4)", "('data', 'model')",
+                       kw={"mode": "federated", "elastic": False})
+    weighted = _run_dryrun("qwen3-1.7b", "train_4k", "(4, 4)", "('data', 'model')",
+                           kw={"mode": "federated", "elastic": True})
+    assert weighted["bottleneck"] == flat["bottleneck"]
+    assert weighted["flops"] == pytest.approx(flat["flops"], rel=0.01)
+    assert weighted["coll"] == pytest.approx(flat["coll"], rel=0.01)
+    assert weighted["mem"] == pytest.approx(flat["mem"], rel=0.02)
 
 
 @pytest.mark.slow
