@@ -1,0 +1,115 @@
+"""Compressed uplink: bytes-vs-perplexity across the ``core/compression`` codecs
+(the PR's acceptance table; Photon arXiv 2411.02908 §comm-efficiency).
+
+Every row runs the identical federation — heavy straggler profile, FedAvg
+data-size weighting, same seed, so the participation plans are identical — and
+changes ONLY the uplink codec. The comparison is total uplink bytes over the run
+vs the final validation perplexity: compression is only worth shipping if the
+bytes drop without the model paying for it. With top-k at 5% the uplink must
+shrink ≥ 10x while final perplexity stays within 5% of the uncompressed run
+(asserted — the acceptance criterion), which is what error feedback buys: the
+dropped 95% of each client's delta mass is re-injected on its next upload
+instead of being lost.
+
+The outer optimizer is FedAdam: under plain FedAvg a 5%-sparse delta only moves
+5% of the coordinates per round and the compressed run trails the uncompressed
+one for tens of rounds, while FedAdam's server-side moment accumulators spread
+each sparse update over every coordinate (and normalize per-coordinate scale),
+at which point error-feedback top-k matches — in this configuration beats — the
+dense uplink. Compression composes with the outer optimizer choice; the bench
+pins the pairing that makes the paper's comm-efficiency economics actually work.
+
+Also cross-checks the *analytic* ``uplink_bytes`` accounting (what the training
+loop logs) against the *measured* size of a real encoded payload — the logged
+comm tables are only trustworthy if the two agree.
+
+Writes ``BENCH_compressed_uplink.json`` for the CI bench lane's artifact upload.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, run_fed, tiny_cfg
+from repro.core import get_codec, uplink_bytes
+
+SCHEMES = ("float32", "bf16", "int8", "topk")
+TOPK_FRACTION = 0.05
+OUT_JSON = "BENCH_compressed_uplink.json"
+
+
+def _measured_payload_bytes(scheme: str, params) -> float:
+    """Encode one params-shaped pseudo-gradient and weigh the actual payload."""
+    codec = get_codec(scheme, TOPK_FRACTION)
+    rng = np.random.default_rng(0)
+    delta = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(rng.standard_normal(p.shape), jnp.float32), params
+    )
+    payload, _ = codec.encode(delta)
+    return codec.payload_nbytes(payload)
+
+
+def main(quick: bool = False) -> None:
+    rounds, tau, pop, k = (12, 6, 8, 4) if quick else (30, 8, 8, 4)
+    cfg = tiny_cfg(d_model=128)
+    base = [
+        "--straggler-profile", "heavy", "--client-weighting", "examples",
+        "--topk-fraction", str(TOPK_FRACTION),
+    ]
+
+    rows = {}
+    for scheme in SCHEMES:
+        out = run_fed(
+            cfg=cfg, rounds=rounds, tau=tau, clients=k, population=pop,
+            outer="fedadam", outer_lr=0.01,
+            extra=base + ["--uplink", scheme],
+        )
+        hist = out["history"]
+        params = out["state"]["params"]
+        bytes_total = float(sum(h["uplink_bytes_round"] for h in hist))
+        per_upload = uplink_bytes(params, scheme, TOPK_FRACTION)
+        measured = _measured_payload_bytes(scheme, params)
+        rows[scheme] = {
+            "uplink_bytes_total": bytes_total,
+            "bytes_per_upload_analytic": per_upload,
+            "bytes_per_upload_measured": measured,
+            "final_val_ppl": float(hist[-1]["val_ppl"]),
+            "final_train_loss": float(hist[-1]["train_loss"]),
+            "rounds": rounds,
+        }
+        emit(
+            f"compressed_uplink/{scheme}",
+            out["seconds"] * 1e6 / max(1, rounds * tau),
+            f"bytes_total={bytes_total:.3e} per_upload={per_upload:.3e} "
+            f"measured={measured:.3e} final_ppl={rows[scheme]['final_val_ppl']:.1f}",
+        )
+
+    f32, topk = rows["float32"], rows["topk"]
+    ratio = f32["uplink_bytes_total"] / max(topk["uplink_bytes_total"], 1e-12)
+    ppl_rel = topk["final_val_ppl"] / f32["final_val_ppl"]
+    rows["summary"] = {
+        "topk_fraction": TOPK_FRACTION,
+        "topk_bytes_reduction": ratio,
+        "topk_final_ppl_vs_float32": ppl_rel,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(rows, f, indent=2)
+
+    # acceptance: ≥10x fewer uplink bytes at 5% top-k, perplexity within 5%
+    assert ratio >= 10.0, f"topk bytes reduction only {ratio:.2f}x (< 10x)"
+    assert ppl_rel <= 1.05, (
+        f"topk final ppl {topk['final_val_ppl']:.1f} is {ppl_rel:.3f}x the "
+        f"uncompressed {f32['final_val_ppl']:.1f} (> 1.05x): error feedback "
+        f"failed to absorb the sparsification"
+    )
+    emit(
+        "compressed_uplink/acceptance", 0.0,
+        f"bytes_reduction={ratio:.2f}x>=10 ppl_ratio={ppl_rel:.3f}<=1.05 OK",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ import traceback
 from benchmarks import (
     bench_async_vs_sync,
     bench_communication,
+    bench_compressed_uplink,
     bench_eval_harness,
     bench_fed_vs_central,
     bench_heterogeneity,
@@ -29,6 +30,7 @@ from benchmarks import (
 BENCHES = [
     ("scaling_table", bench_scaling_table),  # Tables 1-3
     ("communication", bench_communication),  # §4.3 / C7
+    ("compressed_uplink", bench_compressed_uplink),  # codec bytes-vs-perplexity
     ("kernels", bench_kernels),  # kernel layer
     ("fed_vs_central", bench_fed_vs_central),  # Fig 3/9, C1-C2
     ("heterogeneity", bench_heterogeneity),  # Fig 4/5, C3

@@ -13,8 +13,15 @@ clients run on an event-driven timeline, slow institutions finish late and land 
 later buffers with staleness-discounted weights, and the server applies one outer
 update per ``--buffer-size`` admitted deltas — no straggler's work is discarded.
 
+``--uplink`` compresses each institution's pseudo-gradient before it crosses the
+wire (``core/compression`` codecs); with ``topk``, every client carries its own
+error-feedback residual — under async dispatch the residuals stay keyed by client
+id across interleaved completions and buffer flushes.
+
   PYTHONPATH=src python examples/heterogeneous_federation.py
   PYTHONPATH=src python examples/heterogeneous_federation.py --aggregation async --rounds 2
+  PYTHONPATH=src python examples/heterogeneous_federation.py --aggregation async \
+      --uplink topk --rounds 2
 """
 import argparse
 
@@ -24,15 +31,19 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import (
     STRAGGLER_PROFILES,
+    UPLINK_SCHEMES,
     AsyncAggConfig,
     AsyncFederationDriver,
     FederatedConfig,
     InnerOptConfig,
     OuterOptConfig,
     ParticipationConfig,
-    federated_round,
+    federated_round_with_uplink,
+    get_codec,
     init_federated_state,
+    init_uplink_residuals,
     plan_round,
+    uplink_bytes,
 )
 from repro.data import PILE_CATEGORIES, build_client_streams, round_batches, validation_stream
 from repro.metrics import evaluate_perplexity
@@ -49,6 +60,9 @@ def parse_args():
     ap.add_argument("--buffer-size", type=int, default=4,
                     help="async: deltas per outer update")
     ap.add_argument("--staleness-alpha", type=float, default=0.5)
+    ap.add_argument("--uplink", default="float32", choices=list(UPLINK_SCHEMES),
+                    help="pseudo-gradient uplink codec")
+    ap.add_argument("--topk-fraction", type=float, default=0.05)
     return ap.parse_args()
 
 
@@ -81,13 +95,26 @@ def main():
         weighting="examples",
     )
 
+    codec = (
+        get_codec(args.uplink, args.topk_fraction)
+        if args.uplink != "float32" else None
+    )
     if args.aggregation == "async":
-        run_async(args, cfg, model, fed, pcfg, streams, val)
+        run_async(args, cfg, model, fed, pcfg, streams, val, codec)
         return
 
-    state = init_federated_state(fed, model.init(jax.random.PRNGKey(0)))
+    params = model.init(jax.random.PRNGKey(0))
+    state = init_federated_state(fed, params)
+    if codec is not None and codec.stateful:
+        state["uplink_residuals"] = init_uplink_residuals(codec, params, CLIENTS)
+    if codec is not None:
+        print(f"uplink codec: {codec!r} "
+              f"({uplink_bytes(params, 'float32') / codec.nbytes(params):.1f}x "
+              f"fewer bytes per upload)")
     round_fn = jax.jit(
-        lambda s, b, w: federated_round(model.loss, fed, s, b, client_weights=w)
+        lambda s, b, w, sel: federated_round_with_uplink(
+            model.loss, fed, codec, s, b, client_weights=w, selected=sel
+        )
     )
     for rnd in range(args.rounds):
         plan = plan_round(pcfg, SEED, rnd)
@@ -98,6 +125,7 @@ def main():
             state,
             {k: jnp.asarray(v) for k, v in batches.items()},
             jnp.asarray(plan.weights),
+            jnp.asarray(plan.selected),
         )
         ppl = evaluate_perplexity(model, state["params"], val, batches=2, batch_size=BATCH)
         print(
@@ -111,7 +139,7 @@ def main():
     print("heterogeneous federation converged under churn (paper claims C3 + §7).")
 
 
-def run_async(args, cfg, model, fed, pcfg, streams, val):
+def run_async(args, cfg, model, fed, pcfg, streams, val, codec=None):
     """The same federation, asynchronously: slow institutions finish late and are
     buffered with staleness discounts instead of being cut at the deadline."""
     acfg = AsyncAggConfig(
@@ -122,9 +150,14 @@ def run_async(args, cfg, model, fed, pcfg, streams, val):
         b = round_batches([streams[cid]], TAU, BATCH)
         return {k: jnp.asarray(v) for k, v in b.items()}
 
+    params = model.init(jax.random.PRNGKey(0))
+    if codec is not None:
+        print(f"uplink codec: {codec!r} "
+              f"({uplink_bytes(params, 'float32') / codec.nbytes(params):.1f}x "
+              f"fewer bytes per upload)")
     driver = AsyncFederationDriver(
         model.loss, fed, acfg, pcfg, make_batches,
-        seed=SEED, params=model.init(jax.random.PRNGKey(0)),
+        seed=SEED, params=params, codec=codec,
     )
 
     def on_update(i, row):
@@ -141,11 +174,14 @@ def run_async(args, cfg, model, fed, pcfg, streams, val):
         )
 
     driver.run_updates(args.rounds, on_update=on_update)
+    uplink = (
+        f", uplink: {driver.uplink_bytes_total / 1e6:.1f} MB" if codec else ""
+    )
     print(
         f"async federation applied {args.rounds} buffered updates in "
         f"{driver.sim_time:.2f} simulated median-rounds "
         f"(client work aggregated: {driver.work_completed:.1f}, "
-        f"wasted: {driver.work_wasted:.1f}) — no straggler discarded."
+        f"wasted: {driver.work_wasted:.1f}{uplink}) — no straggler discarded."
     )
 
 

@@ -8,14 +8,26 @@ from repro.core.async_agg import (  # noqa: F401
     init_async_state,
     staleness_discount,
 )
+from repro.core.compression import (  # noqa: F401
+    Bf16Codec,
+    Codec,
+    IdentityCodec,
+    Int8Codec,
+    TopKCodec,
+    UPLINK_SCHEMES,
+    get_codec,
+    uplink_bytes,
+)
 from repro.core.federated import (  # noqa: F401
     FederatedConfig,
     apply_aggregate,
     centralized_step,
     federated_round,
+    federated_round_with_uplink,
     hierarchical_mean,
     init_centralized_state,
     init_federated_state,
+    init_uplink_residuals,
     run_clients,
 )
 from repro.core.inner_opt import InnerOptConfig, cosine_lr, global_norm  # noqa: F401

@@ -57,12 +57,15 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.compression import Codec
 from repro.core.federated import (
     FederatedConfig,
     apply_aggregate,
     init_federated_state,
+    init_uplink_residuals,
     run_clients,
 )
+from repro.core.inner_opt import global_norm
 from repro.core.sampler import AsyncTimeline, ParticipationConfig
 
 
@@ -170,12 +173,21 @@ def admit_delta(
     fed: FederatedConfig,
     acfg: AsyncAggConfig,
     state: Dict[str, Any],
-    delta,  # pytree, leaves shaped like params (no client axis)
+    delta,  # pytree: params-shaped pseudo-gradient, or a codec payload (no client axis)
     client_round: jax.Array,  # () int32 — the model version the delta was computed against
     weight: jax.Array,  # () float32 — pre-discount aggregation weight (n_k or 1)
     auto_flush: bool = True,  # static: flush in-graph (lax.cond) when the buffer fills
+    codec: Optional[Codec] = None,  # uplink codec; decodes the payload at admission
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
     """Admit one client pseudo-gradient into the buffer; flush when it fills.
+
+    With a ``codec`` the arrival is an ENCODED payload — exactly what
+    ``run_clients`` emitted over the uplink — and is decoded to float32 here, at
+    the server door, so the buffer lanes and every flush stay codec-agnostic.
+    The client-side error-feedback residual never crosses the wire: it stays
+    keyed by client id on the sender (``AsyncFederationDriver`` owns one row per
+    population client), which is what keeps residuals intact across buffer
+    flushes, staleness rejections, and redispatches.
 
     Staleness is derived from the round *tag*, s = server_round − client_round,
     so a flush that happens between two admissions of one batch automatically
@@ -198,6 +210,8 @@ def admit_delta(
     Buffers write exact copies either way — the two modes differ only in how the
     flush is compiled, never in which deltas it aggregates.
     """
+    if codec is not None:
+        delta = codec.decode(delta)
     staleness = jnp.maximum(
         (state["round"] - client_round).astype(jnp.float32), 0.0
     )
@@ -252,9 +266,10 @@ def admit_deltas(
     fed: FederatedConfig,
     acfg: AsyncAggConfig,
     state: Dict[str, Any],
-    deltas,  # pytree, leaves (N, ...) — N arrivals in admission order
+    deltas,  # pytree, leaves (N, ...) — N arrivals (or codec payloads) in admission order
     client_rounds: jax.Array,  # (N,) int32 round tags
     weights: jax.Array,  # (N,) float32 pre-discount weights
+    codec: Optional[Codec] = None,  # uplink codec; each arrival decoded at admission
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
     """Admit a batch of arrivals in order — the ``(state, deltas, tags, weights)
     → state`` form of the aggregator. A ``lax.scan`` over the arrival axis, so
@@ -265,7 +280,7 @@ def admit_deltas(
 
     def body(st, x):
         d, r, w = x
-        return admit_delta(fed, acfg, st, d, r, w)
+        return admit_delta(fed, acfg, st, d, r, w, codec=codec)
 
     return jax.lax.scan(
         body,
@@ -294,6 +309,16 @@ class AsyncFederationDriver:
     ``make_batches(client_id) -> batches`` keeps the data plane outside: leaves
     must be (τ, 1, ...) — the client axis of the shared client phase is 1 here,
     one jitted computation reused for every completion (no recompiles).
+
+    With a ``codec``, each completion uploads the ENCODED payload and the server
+    decodes at admission. Error-feedback residuals are owned HERE, keyed by
+    population client id (``self.residuals``, leaves (P, ...)): a client's row is
+    gathered at its completion, consumed by its encode, and scattered back to the
+    same id — so residuals survive redispatch, interleaved completions of other
+    clients, and buffer flushes in between, and two clients can never share or
+    clobber each other's feedback state. ``checkpoint_state()`` folds the store
+    into the server-state pytree so it round-trips through the checkpoint
+    manager with everything else.
     """
 
     def __init__(
@@ -308,24 +333,87 @@ class AsyncFederationDriver:
         params=None,
         rng: Optional[jax.Array] = None,
         state: Optional[Dict[str, Any]] = None,
+        codec: Optional[Codec] = None,
     ):
         self.fed = fed
         self.acfg = acfg
+        self.codec = codec
         self.make_batches = make_batches
         fed1 = replace(fed, clients_per_round=1, keep_inner_state=False)
-        self._client_fn = jax.jit(
-            lambda p, r, b: run_clients(loss_fn, fed1, {"params": p, "round": r}, b)
-        )
+        stateful = codec is not None and codec.stateful
+        # with a codec the dispatched state carries a per-dispatch rng lane, so
+        # stochastic-rounding noise decorrelates across the buffer's deltas
+        # (M correlated quantization errors would not average out in the flush)
+        if stateful:
+            self._client_fn = jax.jit(
+                lambda p, r, b, e, k: run_clients(
+                    loss_fn, fed1, {"params": p, "round": r, "rng": k}, b,
+                    codec=codec, residuals=e,
+                )
+            )
+        elif codec is not None:
+            self._client_fn = jax.jit(
+                lambda p, r, b, k: run_clients(
+                    loss_fn, fed1, {"params": p, "round": r, "rng": k}, b,
+                    codec=codec,
+                )
+            )
+        else:
+            self._client_fn = jax.jit(
+                lambda p, r, b: run_clients(
+                    loss_fn, fed1, {"params": p, "round": r}, b
+                )
+            )
         # write-only admits + a standalone jitted flush: the flush then compiles
         # in the same fusion context as the sync server phase, keeping the
         # buffer_size==K staleness_alpha==0 path bitwise-equal to federated_round
         self._admit_fn = jax.jit(
-            lambda st, d, r, w: admit_delta(fed, acfg, st, d, r, w, auto_flush=False)
+            lambda st, d, r, w: admit_delta(
+                fed, acfg, st, d, r, w, auto_flush=False, codec=codec
+            )
         )
         self._flush_fn = jax.jit(lambda st: flush_buffer(fed, acfg, st))
         if state is None:
             state = init_async_state(fed, acfg, params, rng)
+        else:
+            state = dict(state)  # may carry 'uplink_residuals' from a checkpoint
+        self.residuals = state.pop("uplink_residuals", None)
         self.state = state
+        if self.residuals is not None and not stateful:
+            raise ValueError(
+                "restored state carries per-client error-feedback residuals but "
+                "the driver's codec is not stateful — pass the codec the "
+                "checkpoint was written with, or strip 'uplink_residuals' to "
+                "deliberately discard the clients' accumulated feedback"
+            )
+        if stateful and self.residuals is None:
+            self.residuals = init_uplink_residuals(
+                codec, self.state["params"], pcfg.population
+            )
+        if stateful:
+            # population-id gather/scatter as two tiny jits (traced cid — one
+            # compile each, reused for every completion)
+            self._res_gather = jax.jit(
+                lambda store, cid: jax.tree_util.tree_map(
+                    lambda r: r[cid][None], store
+                )
+            )
+            self._res_scatter = jax.jit(
+                lambda store, cid, new: jax.tree_util.tree_map(
+                    lambda r, n: r.at[cid].set(n[0]), store, new
+                )
+            )
+            self._res_norm_fn = jax.jit(global_norm)
+        self._bytes_per_upload = (
+            float(codec.nbytes(self.state["params"])) if codec is not None
+            else 4.0 * sum(
+                x.size for x in jax.tree_util.tree_leaves(self.state["params"])
+            )
+        )
+        if codec is not None:
+            # derived, never consumed: the server rng lane stays untouched
+            self._uplink_rng = jax.random.fold_in(self.state["rng"], 0x55504C4B)
+        self.uplink_bytes_total = 0.0  # bytes actually uploaded (incl. rejected)
         self.timeline = AsyncTimeline(pcfg, seed)
         self.sim_time = 0.0
         self.work_completed = 0.0  # simulated client-time that reached the buffer
@@ -335,6 +423,7 @@ class AsyncFederationDriver:
         self._busy: set = set()  # population client ids currently holding a slot
         self._losses: List[float] = []  # client train losses since last flush
         self._staleness: List[float] = []  # admitted staleness since last flush
+        self._res_norms: List[float] = []  # EF residual norms since last flush
         for _ in range(pcfg.clients_per_round):
             self._dispatch()
 
@@ -376,17 +465,42 @@ class AsyncFederationDriver:
         if ev.completes:
             # the client trained and consumed its data either way — but when the
             # server is certain to reject the upload (staleness is known at pop
-            # time: no flush can intervene), skip the simulation's τ-step compute
+            # time: no flush can intervene), skip the simulation's τ-step compute.
+            # Not with an error-feedback codec: the client compresses and uploads
+            # before learning of the rejection, so its residual must advance —
+            # run the client phase and let admission refuse the payload.
             staleness = int(self.state["round"]) - version
             rejected = 0 < self.acfg.max_staleness < staleness
             batches = self.make_batches(ev.client)
-            if rejected:
+            if rejected and self.residuals is None:
                 self.work_wasted += ev.duration
             else:
-                deltas, aux = self._client_fn(
-                    snapshot, jnp.asarray(version, jnp.int32), batches
-                )
+                if self.codec is not None:
+                    # unique per dispatch: fold_in by the event's dispatch index
+                    enc_key = jax.random.fold_in(self._uplink_rng, ev.index)
+                if self.residuals is not None:
+                    cid = jnp.asarray(ev.client, jnp.int32)
+                    cohort_res = self._res_gather(self.residuals, cid)
+                    deltas, aux = self._client_fn(
+                        snapshot, jnp.asarray(version, jnp.int32), batches,
+                        cohort_res, enc_key,
+                    )
+                    # the residual belongs to the client regardless of what the
+                    # server decides about this upload
+                    self.residuals = self._res_scatter(
+                        self.residuals, cid, aux["residuals"]
+                    )
+                    self._res_norms.append(float(self._res_norm_fn(aux["residuals"])))
+                elif self.codec is not None:
+                    deltas, aux = self._client_fn(
+                        snapshot, jnp.asarray(version, jnp.int32), batches, enc_key
+                    )
+                else:
+                    deltas, aux = self._client_fn(
+                        snapshot, jnp.asarray(version, jnp.int32), batches
+                    )
                 delta = jax.tree_util.tree_map(lambda d: d[0], deltas)
+                self.uplink_bytes_total += self._bytes_per_upload
                 self.state, m = self._admit_fn(
                     self.state,
                     delta,
@@ -414,8 +528,22 @@ class AsyncFederationDriver:
             float(jnp.mean(jnp.asarray(self._losses))) if self._losses else 0.0
         )
         row["admitted_staleness"] = list(self._staleness)
-        self._losses, self._staleness = [], []
+        row["uplink_bytes_total"] = self.uplink_bytes_total
+        if self.residuals is not None:
+            row["uplink_residual_norm"] = (
+                sum(self._res_norms) / len(self._res_norms) if self._res_norms else 0.0
+            )
+        self._losses, self._staleness, self._res_norms = [], [], []
         return row
+
+    def checkpoint_state(self) -> Dict[str, Any]:
+        """Server state + the per-client error-feedback store as ONE pytree with
+        a fixed structure, so it round-trips through ``CheckpointManager`` /
+        ``save_pytree`` like any other state (restore by passing it back as
+        ``state=``). Without a stateful codec this is just ``self.state``."""
+        if self.residuals is None:
+            return self.state
+        return dict(self.state, uplink_residuals=self.residuals)
 
     def force_flush(self) -> Optional[Dict[str, float]]:
         """Apply a final outer update from a partially filled buffer (end of

@@ -3,16 +3,31 @@ PostProcess). The paper ships lossless compression only; these are the beyond-pa
 lossy options, all with unbiasedness or error-feedback so FedAvg convergence
 guarantees carry over:
 
-  - bf16 / f8 stochastic-rounding cast      (2x / 4x uplink reduction)
+  - bf16 stochastic-rounding cast            (2x uplink reduction, unbiased)
+  - per-tensor int8 quantization             (~4x, scale per tensor)
   - top-k sparsification with error feedback (10-100x, stateful residual per client)
-  - per-tensor int8 quantization             (4x, scale+zero-point)
 
-All operate on pseudo-gradient pytrees and compose with DP clipping (clip before
-compress). The decompressed tree always has the original dtypes/shapes so the outer
-optimizer is agnostic.
+The low-level primitives (``cast_compress`` / ``int8_compress`` / ``topk_compress``)
+operate on single pseudo-gradient pytrees. The :class:`Codec` objects wrap them
+into the uplink abstraction the federated round consumes (``core/federated.py``):
+
+  - ``encode(delta, residual)`` runs client-side — the *payload* it returns is what
+    crosses the wire, and for error-feedback codecs the returned residual is the
+    client's own state, keyed by population client id by the caller (sync rounds
+    gather/scatter a population store; the async driver owns one row per client).
+  - ``decode(payload)`` runs server-side, restoring a float32 params-shaped tree so
+    aggregation and the outer optimizer stay codec-agnostic.
+  - ``nbytes(params_like)`` is the analytic per-upload byte count (the comm tables);
+    ``payload_nbytes(payload)`` measures an actual encoded payload — the two agree
+    (tested), which is what makes the logged ``uplink_bytes`` trustworthy.
+
+All codecs compose with DP clipping (clip before compress). The identity codec is
+bitwise transparent: a round run through encode→decode with it reproduces the
+uncompressed ``federated_round`` exactly, rng and DP-noise lanes included (tested).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -26,22 +41,24 @@ import jax.numpy as jnp
 
 def cast_compress(tree, dtype=jnp.bfloat16, rng: Optional[jax.Array] = None):
     """Cast to a narrow dtype; with ``rng``, stochastic rounding keeps the cast
-    unbiased (E[compress(x)] = x)."""
+    unbiased (E[compress(x)] = x). Stochastic rounding is implemented at the bit
+    level — bf16 is the top 16 bits of f32, so adding uniform noise in
+    [0, 2^16) to the f32 pattern and truncating rounds to each bf16 neighbor
+    with probability exactly proportional to proximity — and therefore only
+    supports ``bfloat16``; other dtypes take the deterministic cast."""
     if rng is None:
         return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+    if dtype != jnp.bfloat16:
+        raise ValueError(f"stochastic rounding is bf16-only, got {dtype}")
 
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(rng, len(leaves))
 
     def sr(x, key):
-        down = x.astype(dtype).astype(x.dtype)
-        up = jnp.nextafter(
-            down.astype(jnp.float32), jnp.full_like(down, jnp.inf, jnp.float32)
-        ).astype(dtype).astype(x.dtype)
-        span = jnp.where(up != down, up - down, 1.0)
-        p_up = jnp.clip((x - down) / span, 0.0, 1.0)
-        take_up = jax.random.uniform(key, x.shape) < p_up
-        return jnp.where(take_up, up, down).astype(dtype)
+        bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+        noise = jax.random.randint(key, x.shape, 0, 1 << 16).astype(jnp.uint32)
+        rounded = (bits + noise) & jnp.uint32(0xFFFF0000)
+        return jax.lax.bitcast_convert_type(rounded, jnp.float32).astype(dtype)
 
     return jax.tree_util.tree_unflatten(treedef, [sr(l, k) for l, k in zip(leaves, keys)])
 
@@ -64,7 +81,13 @@ def topk_compress(
 ) -> Tuple[Any, Any]:
     """Keep the top ``k_fraction`` entries by magnitude per tensor; the dropped mass
     accumulates in the ``error`` residual (error feedback a la Stich et al.) and is
-    re-added next round. Returns (sparse_tree, new_error)."""
+    re-added next round. Returns (sparse_tree, new_error).
+
+    The residual is CLIENT state: pass each client its own ``error`` tree and store
+    the returned one under the same client id (see :class:`TopKCodec` /
+    ``core/federated.init_uplink_residuals``). Calling without ``error`` silently
+    restarts feedback from zero — correct only for a client's first-ever upload.
+    """
     if error is None:
         error = init_error_feedback(tree)
 
@@ -111,16 +134,173 @@ def int8_decompress(ctree, like=None) -> Any:
 # uplink byte accounting
 # ---------------------------------------------------------------------------
 
+# CLI spelling → canonical scheme name (the ``--uplink`` flag speaks the short form)
+SCHEME_ALIASES = {
+    "bf16": "bfloat16",
+    "identity": "float32",
+    "fp32": "float32",
+}
+
+
+def _canon_scheme(scheme: str) -> str:
+    return SCHEME_ALIASES.get(scheme, scheme)
+
 
 def uplink_bytes(tree, scheme: str = "float32", k_fraction: float = 0.01) -> float:
-    """Bytes a client transmits per round under each scheme (for the comm tables)."""
-    n = sum(x.size for x in jax.tree_util.tree_leaves(tree))
+    """Bytes a client transmits per upload under each scheme (for the comm tables).
+
+    Exact per-leaf accounting, matched against real encoded payloads in the tests:
+    int8 pays one float32 scale per tensor; top-k pays (value + index) per kept
+    entry with the same per-tensor ``k = max(1, int(size * k_fraction))`` that
+    ``topk_compress`` keeps.
+    """
+    scheme = _canon_scheme(scheme)
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = sum(x.size for x in leaves)
     if scheme == "float32":
         return 4.0 * n
     if scheme == "bfloat16":
         return 2.0 * n
     if scheme == "int8":
-        return 1.0 * n + 4.0 * len(jax.tree_util.tree_leaves(tree))
+        return 1.0 * n + 4.0 * len(leaves)
     if scheme == "topk":
-        return k_fraction * n * (4.0 + 4.0)  # value + index
+        return float(sum(max(1, int(x.size * k_fraction)) * (4 + 4) for x in leaves))
     raise ValueError(scheme)
+
+
+# ---------------------------------------------------------------------------
+# Codec abstraction — what the federated round actually plugs in
+# ---------------------------------------------------------------------------
+
+
+class Codec:
+    """An uplink codec: a pure, jittable encode/decode pair over pseudo-gradient
+    pytrees, plus byte accounting.
+
+    ``encode(delta, residual=None, rng=None) -> (payload, new_residual)`` and
+    ``decode(payload) -> float32 tree``. Stateless codecs ignore/return the
+    residual unchanged (``None``); stateful ones (:class:`TopKCodec`) carry the
+    error-feedback residual, which is PER-CLIENT state — the caller keys it by
+    population client id and must never share one residual between clients.
+    ``vmap`` both over a leading client axis for cohort encodes.
+    """
+
+    name: str = "float32"
+    stateful: bool = False  # encode carries an error-feedback residual
+    needs_rng: bool = False  # encode uses randomness (stochastic rounding)
+
+    def init_residual(self, params):
+        """Zero residual state shaped like ``params`` (stateful codecs only)."""
+        return None
+
+    def encode(self, delta, residual=None, rng: Optional[jax.Array] = None):
+        return delta, residual
+
+    def decode(self, payload):
+        return payload
+
+    def nbytes(self, params_like) -> float:
+        """Analytic bytes per upload for a ``params_like``-shaped delta."""
+        return uplink_bytes(params_like, self.name)
+
+    def payload_nbytes(self, payload) -> float:
+        """Actual bytes of one encoded payload (host-side; agrees with nbytes)."""
+        import numpy as np
+
+        return float(
+            sum(np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(payload))
+        )
+
+    def __repr__(self) -> str:  # config echo in logs / manifests
+        return f"{type(self).__name__}({self.name})"
+
+
+class IdentityCodec(Codec):
+    """Uncompressed float32 uplink. encode/decode are exact identities, so a round
+    run through this codec is bitwise the uncompressed ``federated_round`` —
+    the equivalence anchor every other codec is measured against."""
+
+    name = "float32"
+
+
+class Bf16Codec(Codec):
+    """bfloat16 cast with stochastic rounding (unbiased: E[payload] = delta).
+    Without an rng key the cast degrades to deterministic round-to-nearest,
+    matching the legacy ``pseudo_grad_dtype='bfloat16'`` path bitwise."""
+
+    name = "bfloat16"
+    needs_rng = True
+
+    def encode(self, delta, residual=None, rng: Optional[jax.Array] = None):
+        return cast_compress(delta, jnp.bfloat16, rng=rng), residual
+
+    def decode(self, payload):
+        return cast_decompress(payload, jnp.float32)
+
+
+class Int8Codec(Codec):
+    """Per-tensor symmetric int8: payload leaves are {'q': int8, 'scale': f32}."""
+
+    name = "int8"
+
+    def encode(self, delta, residual=None, rng: Optional[jax.Array] = None):
+        return int8_compress(delta), residual
+
+    def decode(self, payload):
+        return int8_decompress(payload)
+
+
+@dataclass(frozen=True)
+class TopKCodec(Codec):
+    """Top-k magnitude sparsification with per-client error feedback: dropped mass
+    lands in the client's residual and is re-injected on its next upload. The
+    payload is the dense-with-zeros sparse tree (the wire format would ship
+    (index, value) pairs — ``nbytes`` accounts 8 bytes per kept entry)."""
+
+    k_fraction: float = 0.05
+
+    name = "topk"
+    stateful = True
+
+    def __post_init__(self):
+        if not 0.0 < self.k_fraction <= 1.0:
+            raise ValueError(f"k_fraction must be in (0, 1], got {self.k_fraction}")
+
+    def init_residual(self, params):
+        return init_error_feedback(params)
+
+    def encode(self, delta, residual=None, rng: Optional[jax.Array] = None):
+        return topk_compress(delta, self.k_fraction, residual)
+
+    def decode(self, payload):
+        return payload  # already dense float32-compatible
+
+    def nbytes(self, params_like) -> float:
+        return uplink_bytes(params_like, "topk", self.k_fraction)
+
+    def payload_nbytes(self, payload) -> float:
+        import numpy as np
+
+        return float(
+            sum(
+                int((np.asarray(x) != 0).sum()) * (4 + 4)  # value + index per entry
+                for x in jax.tree_util.tree_leaves(payload)
+            )
+        )
+
+
+UPLINK_SCHEMES = ("float32", "bf16", "int8", "topk")
+
+
+def get_codec(scheme: str, topk_fraction: float = 0.05) -> Codec:
+    """Factory keyed by the ``--uplink`` CLI spelling (aliases accepted)."""
+    canon = _canon_scheme(scheme)
+    if canon == "float32":
+        return IdentityCodec()
+    if canon == "bfloat16":
+        return Bf16Codec()
+    if canon == "int8":
+        return Int8Codec()
+    if canon == "topk":
+        return TopKCodec(k_fraction=topk_fraction)
+    raise ValueError(f"unknown uplink scheme {scheme!r}; choose from {UPLINK_SCHEMES}")

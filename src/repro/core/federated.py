@@ -25,6 +25,18 @@ aggregation share one client code path:
   - :func:`federated_round` — the two recomposed; with all-ones (or ``None``)
     weights this is bitwise-identical to the pre-refactor flat-mean round.
 
+The client→server uplink between the two phases is where compression plugs in
+(``core/compression.Codec``): with a ``codec``, ``run_clients`` emits *encoded*
+payloads (the wire format) plus each client's updated error-feedback residual,
+and ``apply_aggregate`` decodes under the participation weight vector before the
+one collective. The identity codec keeps the whole pipeline bitwise-transparent
+(rng and DP-noise lanes included — tested), so every elastic/async equivalence
+guarantee survives compression being threaded through. Error-feedback residuals
+are PER-CLIENT state keyed by population client id: :func:`init_uplink_residuals`
+builds the (P, ...) store and :func:`federated_round_with_uplink` gathers the
+round's cohort rows and scatters them back, masked so a client that did not
+upload keeps its residual untouched.
+
 The same functions drive the single-host simulator (tests, benchmarks) and the
 multi-pod dry-run (launch/dryrun.py); only the jit shardings differ.
 """
@@ -36,6 +48,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.compression import Codec
 from repro.core.inner_opt import (
     InnerOptConfig,
     global_norm,
@@ -162,21 +175,32 @@ def run_clients(
     batches: Dict[str, jax.Array],  # leaves (τ, C, ...) — per-step per-client batches
     client_weights: Optional[jax.Array] = None,  # (C,) elastic participation weights
     shard_clients: Optional[Callable] = None,  # sharding-constraint hook (mesh runs)
+    codec: Optional[Codec] = None,  # uplink codec; encodes the emitted deltas
+    residuals: Optional[Any] = None,  # (C, ...) per-client error-feedback residuals
 ) -> Tuple[Any, Dict[str, Any]]:
     """Client phase of a federated round (Algorithm 1, L.4–7): broadcast θ_global
     over the client axis, τ local inner-optimizer steps per client (no cross-client
     collectives), then per-client pseudo-gradients Δ_k = θ_global − θ_k with DP
-    clipping and uplink quantization applied.
+    clipping and uplink compression applied.
 
-    Pure in ``(state, batches, weights)``; shared verbatim by the synchronous round
-    and the async buffered path (``core/async_agg``), so the two aggregation
-    schedules can never drift apart in client semantics. In the async path the
-    caller passes a *stale* ``state`` (the params snapshot the client was
+    Pure in ``(state, batches, weights, residuals)``; shared verbatim by the
+    synchronous round and the async buffered path (``core/async_agg``), so the two
+    aggregation schedules can never drift apart in client semantics. In the async
+    path the caller passes a *stale* ``state`` (the params snapshot the client was
     dispatched with), which is exactly how a buffered delta acquires staleness.
 
-    Returns ``(deltas, aux)``: ``deltas`` leaves are (C, ...) float32
-    pseudo-gradients ready for aggregation; ``aux`` carries the per-client inner
-    states plus the client-side metric pieces consumed by ``federated_round``.
+    With a ``codec`` the emitted deltas are ENCODED payloads (the uplink wire
+    format; ``apply_aggregate`` decodes them) and, for stateful codecs,
+    ``residuals`` must be each cohort member's own error-feedback state —
+    ``aux['residuals']`` returns the updated rows, with zero-weight (masked)
+    clients keeping their old residual bitwise (they never uploaded). The identity
+    codec encodes/decodes as exact no-ops, so ``codec=IdentityCodec()`` is bitwise
+    ``codec=None``.
+
+    Returns ``(deltas, aux)``: without a codec, ``deltas`` leaves are (C, ...)
+    float32 pseudo-gradients ready for aggregation; ``aux`` carries the per-client
+    inner states plus the client-side metric pieces consumed by
+    ``federated_round``.
     """
     C = fed.clients_per_round
     elastic = client_weights is not None
@@ -256,7 +280,45 @@ def run_clients(
             lambda d: d * scale.reshape((-1,) + (1,) * (d.ndim - 1)), deltas
         )
 
-    if fed.pseudo_grad_dtype != "float32":  # beyond-paper: compressed uplink
+    new_residuals = None
+    if codec is not None:  # encoded uplink: deltas leave as codec payloads
+        enc_keys = None
+        if codec.needs_rng:
+            # derived, never consumed: fold_in leaves the server rng lane
+            # untouched, so stochastic rounding can't perturb the DP-noise draw
+            base = state["rng"] if "rng" in state else jax.random.PRNGKey(0)
+            per_round = jax.random.fold_in(base, state["round"].astype(jnp.uint32))
+            enc_keys = jax.random.split(per_round, C)
+        if codec.stateful:
+            if residuals is None:  # first-ever upload for this cohort
+                residuals = jax.vmap(codec.init_residual)(deltas)
+            if codec.needs_rng:
+                deltas, new_residuals = jax.vmap(
+                    lambda d, e, k: codec.encode(d, e, rng=k)
+                )(deltas, residuals, enc_keys)
+            else:
+                deltas, new_residuals = jax.vmap(
+                    lambda d, e: codec.encode(d, e)
+                )(deltas, residuals)
+            if elastic:
+                # a masked client never uploaded: its dropped-mass residual must
+                # stay bitwise untouched (all-ones weights: where(True, new, _)
+                # is exact, preserving the identity-codec bitwise guarantee)
+                keep = client_weights > 0
+
+                def _keep_old(new, old):
+                    return jnp.where(
+                        keep.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+                    )
+
+                new_residuals = jax.tree_util.tree_map(
+                    _keep_old, new_residuals, residuals
+                )
+        elif codec.needs_rng:
+            deltas = jax.vmap(lambda d, k: codec.encode(d, rng=k)[0])(deltas, enc_keys)
+        else:
+            deltas = jax.vmap(lambda d: codec.encode(d)[0])(deltas)
+    elif fed.pseudo_grad_dtype != "float32":  # legacy flat-cast compressed uplink
         dt = jnp.dtype(fed.pseudo_grad_dtype)
         deltas = jax.tree_util.tree_map(
             lambda d: d.astype(dt).astype(jnp.float32), deltas
@@ -277,6 +339,12 @@ def run_clients(
         "client_model_norm_mean": client_norm_mean,
         "avg_client_model_norm": avg_client_norm,
     }
+    if new_residuals is not None:
+        res_norms = jax.vmap(global_norm)(new_residuals)  # (C,) EF telemetry
+        aux["residuals"] = new_residuals
+        aux["uplink_residual_norm"] = (
+            jnp.sum(res_norms * metric_w) if elastic else jnp.mean(res_norms)
+        )
     return deltas, aux
 
 
@@ -285,11 +353,17 @@ def apply_aggregate(
     state: Dict[str, Any],  # needs 'params', 'outer', 'round', 'rng'
     deltas,  # pytree with leading client/buffer axis (C, ...) — pseudo-gradients
     client_weights: Optional[jax.Array] = None,  # (C,) aggregation weights
+    codec: Optional[Codec] = None,  # uplink codec; decodes encoded deltas first
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
     """Server phase of a federated round (Algorithm 1, L.8–9): ONE weighted
     aggregation of the pseudo-gradients (the round's single cross-client
     collective), optional DP noise on the aggregate, and the outer-optimizer
     update. Pure in ``(state, deltas, weights)`` — jit it.
+
+    With a ``codec``, ``deltas`` arrive as encoded payloads (``run_clients``'s
+    wire format) and are decoded to float32 per client *before* the weighted
+    mean — the weight vector therefore applies to the decoded deltas, so elastic
+    participation and compression compose without either knowing about the other.
 
     The leading axis of ``deltas`` need not be a synchronous cohort: the async
     aggregator's flush (``core/async_agg.flush_buffer``) calls this exact function
@@ -297,6 +371,8 @@ def apply_aggregate(
     the sync and async server updates algebraically (and, at matched inputs,
     bitwise) identical.
     """
+    if codec is not None:
+        deltas = jax.vmap(codec.decode)(deltas)
     elastic = client_weights is not None
     if elastic:
         w = client_weights.astype(jnp.float32)
@@ -395,9 +471,12 @@ def federated_round(
     batches: Dict[str, jax.Array],  # leaves (τ, C, ...) — per-step per-client batches
     client_weights: Optional[jax.Array] = None,  # (C,) elastic participation weights
     shard_clients: Optional[Callable] = None,  # sharding-constraint hook (mesh runs)
+    codec: Optional[Codec] = None,  # uplink codec (encode client-side, decode server-side)
+    residuals: Optional[Any] = None,  # (C, ...) cohort error-feedback residuals
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
     """One full federated round — :func:`run_clients` composed with
-    :func:`apply_aggregate`. Pure function of (state, batches, weights) — jit it.
+    :func:`apply_aggregate`. Pure function of (state, batches, weights, residuals)
+    — jit it.
 
     ``client_weights`` makes the round *elastic*: a (C,) vector of aggregation
     weights (e.g. FedAvg data sizes from a ``ParticipationPlan``), where a zero
@@ -406,13 +485,21 @@ def federated_round(
     cohort K_eff ≤ C runs inside the one compiled computation — no recompile when
     participation changes round to round. ``None`` (and equivalently all-ones
     weights, bitwise) reproduces the legacy flat-mean round.
+
+    ``codec`` compresses the uplink between the two phases; the identity codec
+    (and ``None``) keep the round bitwise the uncompressed one. For stateful
+    codecs the updated cohort residuals come back as
+    ``new_state['uplink_residuals']`` (plus in-graph ``uplink_residual_norm``
+    telemetry); use :func:`federated_round_with_uplink` when the residuals live
+    in a population-keyed store.
     """
     deltas, aux = run_clients(
         loss_fn, fed, state, batches,
         client_weights=client_weights, shard_clients=shard_clients,
+        codec=codec, residuals=residuals,
     )
     new_state, agg_metrics = apply_aggregate(
-        fed, state, deltas, client_weights=client_weights
+        fed, state, deltas, client_weights=client_weights, codec=codec
     )
 
     step_metrics = aux["step_metrics"]
@@ -429,7 +516,73 @@ def federated_round(
 
     if fed.keep_inner_state:
         new_state["inner"] = aux["inner"]
+    if "residuals" in aux:
+        new_state["uplink_residuals"] = aux["residuals"]
+        metrics["uplink_residual_norm"] = aux["uplink_residual_norm"]
     return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Population-keyed error-feedback residual store
+# ---------------------------------------------------------------------------
+
+
+def init_uplink_residuals(codec: Optional[Codec], params, population: int):
+    """The per-client error-feedback store: one zero residual row per POPULATION
+    client, leaves (P, ...) float32. This is the ownership story for compression
+    residuals — a client's row follows it across rounds, cohorts, and (async)
+    dispatches, and the store checkpoints/resumes as ordinary state. ``None`` for
+    stateless codecs (no residual to own)."""
+    if codec is None or not codec.stateful:
+        return None
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros((population,) + p.shape, jnp.float32), params
+    )
+
+
+def federated_round_with_uplink(
+    loss_fn: Callable,
+    fed: FederatedConfig,
+    codec: Optional[Codec],
+    state: Dict[str, Any],
+    batches: Dict[str, jax.Array],
+    client_weights: Optional[jax.Array] = None,
+    selected: Optional[jax.Array] = None,  # (C,) population ids bound to the client axis
+    shard_clients: Optional[Callable] = None,
+) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    """:func:`federated_round` wired to the population-keyed residual store.
+
+    ``state['uplink_residuals']`` holds one error-feedback row per population
+    client; ``selected`` binds this round's client axis to population ids (the
+    ``ParticipationPlan.selected`` vector, traced — changing cohorts never
+    recompiles). The cohort's rows are gathered, the round runs, and the updated
+    rows scatter back — masked clients' rows come back bitwise unchanged (the
+    gather/scatter is then a no-op for them), so padding slots can never clobber
+    a live client's residual. ``selected`` always holds distinct ids (sampler
+    contract), so the scatter is order-independent.
+
+    Stateless codecs (and ``codec=None``) reduce to plain ``federated_round``.
+    """
+    if codec is None or not codec.stateful:
+        return federated_round(
+            loss_fn, fed, state, batches, client_weights=client_weights,
+            shard_clients=shard_clients, codec=codec,
+        )
+    if selected is None:
+        raise ValueError("stateful uplink codec requires the cohort's population ids")
+    store = state["uplink_residuals"]
+    core = {k: v for k, v in state.items() if k != "uplink_residuals"}
+    sel = selected.astype(jnp.int32)
+    cohort_res = jax.tree_util.tree_map(lambda r: jnp.take(r, sel, axis=0), store)
+    new_core, metrics = federated_round(
+        loss_fn, fed, core, batches, client_weights=client_weights,
+        shard_clients=shard_clients, codec=codec, residuals=cohort_res,
+    )
+    new_cohort_res = new_core.pop("uplink_residuals")
+    new_core["uplink_residuals"] = jax.tree_util.tree_map(
+        lambda r, n: r.at[sel].set(n), store, new_cohort_res
+    )
+    return new_core, metrics
 
 
 # ---------------------------------------------------------------------------

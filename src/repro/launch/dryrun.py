@@ -19,6 +19,8 @@ import traceback
 
 
 def main() -> None:
+    from repro.core.compression import UPLINK_SCHEMES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="assigned", help="arch id | 'assigned' | comma list")
     ap.add_argument("--shape", default="all", help="shape name | 'all' | comma list")
@@ -30,6 +32,12 @@ def main() -> None:
                     help="drop the (C,) participation-weight input from the "
                          "federated round (legacy flat-mean lowering)")
     ap.add_argument("--pseudo-grad-dtype", default="float32")
+    ap.add_argument("--uplink", default="float32",
+                    choices=list(UPLINK_SCHEMES),
+                    help="compressed-uplink codec for the federated round: the "
+                         "encoded-delta dtypes are carried through the mesh "
+                         "lowering (residual inputs sharded like the client axis)")
+    ap.add_argument("--topk-fraction", type=float, default=0.05)
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="", help="suffix for result filenames (perf iters)")
     args = ap.parse_args()
@@ -82,6 +90,8 @@ def main() -> None:
                                 mode=mode,
                                 pseudo_grad_dtype=args.pseudo_grad_dtype,
                                 elastic=not args.no_elastic,
+                                uplink=args.uplink,
+                                topk_fraction=args.topk_fraction,
                             )
                         with mesh:
                             step = build_step(cfg, shape_name, mesh, **kw)

@@ -23,6 +23,8 @@ from repro.core import (
     OuterOptConfig,
     centralized_step,
     federated_round,
+    get_codec,
+    init_uplink_residuals,
 )
 from repro.core.outer_opt import init_outer_state
 from repro.models import build_model
@@ -249,6 +251,8 @@ def build_train_step(
     fed: Optional[FederatedConfig] = None,
     pseudo_grad_dtype: str = "float32",
     elastic: bool = True,
+    uplink: str = "float32",
+    topk_fraction: float = 0.05,
 ) -> BuiltStep:
     model = build_model(cfg)
     loss_fn = lambda p, b: model.loss(p, b, remat=remat)
@@ -279,8 +283,12 @@ def build_train_step(
                 ),
             )
 
+        codec = get_codec(uplink, topk_fraction) if uplink != "float32" else None
         step = jax.jit(
-            functools.partial(federated_round, loss_fn, fed, shard_clients=shard_clients)
+            functools.partial(
+                federated_round, loss_fn, fed,
+                shard_clients=shard_clients, codec=codec,
+            )
         )
         batches = input_specs(cfg, shape, mesh, tau_lowered=tau_lowered, mode="federated")
         # elastic participation on the mesh: the (C,) weight vector enters the
@@ -290,6 +298,24 @@ def build_train_step(
         args = (state, batches)
         if elastic:
             args = args + (_sds((C,), jnp.float32, mesh, P()),)
+        if codec is not None and codec.stateful:
+            # per-client error-feedback residuals ride the mesh exactly like the
+            # (C, ...) client-axis params replicas: same clientized pspecs, so
+            # the encoded-uplink round cannot perturb the parameter shardings
+            if not elastic:
+                raise ValueError("stateful uplink codecs require the elastic round")
+            res_shapes = jax.eval_shape(
+                lambda: init_uplink_residuals(
+                    codec, model.init(jax.random.PRNGKey(0)), C
+                )
+            )
+            args = args + (_tree_sds(res_shapes, client_pspecs, mesh),)
+            step = jax.jit(
+                lambda s, b, w, res: federated_round(
+                    loss_fn, fed, s, b, client_weights=w,
+                    shard_clients=shard_clients, codec=codec, residuals=res,
+                )
+            )
         tokens_per_round = tau_lowered * shape.global_batch * shape.seq_len
         mf = 6.0 * cfg.active_param_count() * tokens_per_round
         return BuiltStep(
@@ -305,6 +331,7 @@ def build_train_step(
                 "client_axes": list(client_ax),
                 "fsdp_axes": list(fsdp_ax),
                 "elastic": elastic,
+                "uplink": uplink,
             },
         )
 

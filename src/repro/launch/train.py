@@ -28,13 +28,23 @@ staleness histograms and buffer occupancy). ``--staleness-alpha`` sets the
 discount exponent; ``--max-staleness`` rejects deltas older than that many server
 rounds.
 
+Compressed uplink (``core/compression.py`` codecs): ``--uplink {float32,bf16,
+int8,topk}`` encodes each client's pseudo-gradient before it crosses the
+client→server boundary — bf16 stochastic rounding (2x), per-tensor int8 (~4x), or
+top-k sparsification with per-client error feedback (``--topk-fraction``, 10-100x).
+The identity (float32) uplink is bitwise the uncompressed round. Error-feedback
+residuals are keyed by population client id (one row per client, under sync
+cohorts AND async dispatch), live inside the checkpointed state, and resume
+exactly; per-round uplink bytes / compression ratio / residual norms are logged.
+
 Usage (CPU, minutes):
   PYTHONPATH=src python -m repro.launch.train --arch photon-75m --reduced \
       --rounds 4 --local-steps 8 --clients 4 --population 8
   PYTHONPATH=src python -m repro.launch.train --reduced --rounds 2 \
       --participation markov --dropout-rate 0.25 --straggler-profile mild
   PYTHONPATH=src python -m repro.launch.train --reduced --rounds 4 \
-      --aggregation async --buffer-size 2 --straggler-profile heavy
+      --aggregation async --buffer-size 2 --straggler-profile heavy \
+      --uplink topk --topk-fraction 0.05
 """
 from __future__ import annotations
 
@@ -52,14 +62,17 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core import (
     STRAGGLER_PROFILES,
+    UPLINK_SCHEMES,
     AsyncAggConfig,
     AsyncFederationDriver,
     FederatedConfig,
     InnerOptConfig,
     OuterOptConfig,
     ParticipationConfig,
-    federated_round,
+    federated_round_with_uplink,
+    get_codec,
     init_federated_state,
+    init_uplink_residuals,
     plan_round,
 )
 from repro.data import build_client_streams, round_batches, validation_stream
@@ -69,6 +82,7 @@ from repro.metrics import (
     participation_metrics,
     perplexity,
     staleness_stats,
+    uplink_round_metrics,
     wallclock_speedup,
 )
 from repro.models import build_model
@@ -92,7 +106,16 @@ def parse_args(argv=None):
     ap.add_argument("--fedprox-mu", type=float, default=0.0)
     ap.add_argument("--dp-clip", type=float, default=0.0)
     ap.add_argument("--dp-noise", type=float, default=0.0)
-    ap.add_argument("--pseudo-grad-dtype", default="float32")
+    ap.add_argument("--pseudo-grad-dtype", default="float32",
+                    help="legacy flat-cast uplink; superseded by --uplink")
+    ap.add_argument(
+        "--uplink", default="float32", choices=list(UPLINK_SCHEMES),
+        help="pseudo-gradient uplink codec: float32 (identity, bitwise the "
+             "uncompressed round), bf16 stochastic-rounding cast, per-tensor "
+             "int8, or top-k sparsification with per-client error feedback",
+    )
+    ap.add_argument("--topk-fraction", type=float, default=0.05,
+                    help="--uplink topk: fraction of entries kept per tensor")
     ap.add_argument(
         "--participation", default="uniform", choices=["uniform", "dirichlet", "markov"],
         help="client-availability model: uniform sampling, Dirichlet popularity "
@@ -180,6 +203,16 @@ def run(args, cfg=None) -> dict:
     # --- server state ------------------------------------------------------
     params = model.init(jax.random.PRNGKey(args.seed))
 
+    if args.uplink != "float32" and args.pseudo_grad_dtype != "float32":
+        raise SystemExit(
+            "--uplink and the legacy --pseudo-grad-dtype are mutually exclusive: "
+            "the codec already defines the wire format"
+        )
+    codec = (
+        get_codec(args.uplink, args.topk_fraction)
+        if args.uplink != "float32" else None
+    )
+
     if args.aggregation == "async":
         if args.resume:
             raise SystemExit(
@@ -193,16 +226,46 @@ def run(args, cfg=None) -> dict:
                 "may serve a different model version, so persisted inner Adam "
                 "state would be silently stale"
             )
-        return _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params)
+        return _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec)
 
     state = init_federated_state(fed, params, jax.random.PRNGKey(args.seed + 1))
+    if codec is not None and codec.stateful:
+        # one error-feedback residual row per POPULATION client: the cohort's
+        # rows are gathered/scattered by id inside the jitted round, and the
+        # whole store checkpoints/resumes with the rest of the server state
+        state["uplink_residuals"] = init_uplink_residuals(codec, params, args.population)
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     start_round = 0
     if ckpt and args.resume:
         latest = ckpt.latest_round()
         if latest is not None:
-            state, manifest = ckpt.load_server(latest, state)
+            try:
+                state, manifest = ckpt.load_server(latest, state)
+            except KeyError as e:
+                raise SystemExit(
+                    f"--resume: checkpoint round {latest} does not carry the "
+                    f"state this run needs (missing {e}); error-feedback "
+                    f"residuals only round-trip when the checkpoint was written "
+                    f"with the same --uplink codec"
+                )
+            ckpt_uplink = manifest.get("extra", {}).get("args", {}).get(
+                "uplink", "float32"
+            )
+            if get_codec(ckpt_uplink).stateful and not (
+                codec is not None and codec.stateful
+            ):
+                # the reverse direction of the KeyError above: load_pytree
+                # ignores npz keys absent from the template, so without this
+                # check the clients' accumulated residual mass would be
+                # silently dropped
+                raise SystemExit(
+                    f"--resume: checkpoint round {latest} was written with "
+                    f"--uplink {ckpt_uplink} and carries per-client "
+                    f"error-feedback residuals; resuming with --uplink "
+                    f"{args.uplink} would silently discard them — use the "
+                    f"original codec or start fresh"
+                )
             start_round = latest + 1
             for i, s in enumerate(streams):
                 try:
@@ -216,10 +279,13 @@ def run(args, cfg=None) -> dict:
     def loss_fn(p, b):
         return model.loss(p, b)
 
-    # weights enter as a traced (K,) argument: per-round participation changes
-    # (dropouts, stragglers, K_eff < K) never trigger a recompile
+    # weights and cohort ids enter as traced (K,) arguments: per-round
+    # participation changes (dropouts, stragglers, K_eff < K, which population
+    # clients were picked) never trigger a recompile
     round_fn = jax.jit(
-        lambda s, b, w: federated_round(loss_fn, fed, s, b, client_weights=w)
+        lambda s, b, w, sel: federated_round_with_uplink(
+            loss_fn, fed, codec, s, b, client_weights=w, selected=sel
+        )
     )
 
     history = []
@@ -229,7 +295,9 @@ def run(args, cfg=None) -> dict:
         sel = plan.selected
         batches_np = round_batches([streams[i] for i in sel], args.local_steps, args.batch)
         batches = {k: jnp.asarray(v) for k, v in batches_np.items()}
-        state, metrics = round_fn(state, batches, jnp.asarray(plan.weights))
+        state, metrics = round_fn(
+            state, batches, jnp.asarray(plan.weights), jnp.asarray(sel)
+        )
         metrics = {k: float(v) for k, v in metrics.items()}
         metrics.update(
             round=rnd,
@@ -238,6 +306,9 @@ def run(args, cfg=None) -> dict:
             seconds=time.time() - t0,
             train_ppl=perplexity(metrics["train_loss"]),
             **participation_metrics(plan),
+            **uplink_round_metrics(
+                args.uplink, params, plan.effective_k, args.topk_fraction
+            ),
         )
         val_ppl = evaluate_perplexity(
             model, state["params"], val_stream, batches=args.eval_batches,
@@ -265,9 +336,14 @@ def run(args, cfg=None) -> dict:
     return {"history": history, "state": state, "model": model, "config": cfg}
 
 
-def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params) -> dict:
+def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=None) -> dict:
     """Event-driven FedBuff-style training: K busy client slots, a server-side
-    delta buffer, one outer update per ``--buffer-size`` admitted deltas."""
+    delta buffer, one outer update per ``--buffer-size`` admitted deltas.
+
+    With ``codec``, completions upload encoded payloads (decoded at admission)
+    and the driver owns one error-feedback residual row per population client —
+    the rows ride along in every checkpoint via ``driver.checkpoint_state()``.
+    """
     acfg = AsyncAggConfig(
         buffer_size=(
             args.buffer_size if args.buffer_size is not None
@@ -287,6 +363,7 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params) -> dict
     driver = AsyncFederationDriver(
         loss_fn, fed, acfg, pcfg, make_batches,
         seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
+        codec=codec,
     )
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
@@ -318,6 +395,11 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params) -> dict
         )
         deltas_admitted[0] += int(row.get("buffer_fill", 0))
         row.update(
+            uplink_round_metrics(
+                args.uplink, params, row.get("buffer_fill", 0.0), args.topk_fraction
+            )
+        )
+        row.update(
             update=i,
             round=i,  # outer-update index, the async analogue of the round
             deltas_admitted=float(deltas_admitted[0]),
@@ -348,10 +430,13 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params) -> dict
         if logger:
             logger.log(row)
         if ckpt:
-            # the buffer lanes live inside the state pytree, so a checkpoint
-            # taken between flushes preserves partially aggregated work
-            ckpt.save_server(i, driver.state, extra={"args": vars(args),
-                                                     "sim_time": row["sim_time"]})
+            # the buffer lanes (and, with a stateful codec, the per-client
+            # error-feedback residual store) live inside one state pytree, so a
+            # checkpoint taken between flushes preserves partially aggregated
+            # work and every client's residual
+            ckpt.save_server(i, driver.checkpoint_state(),
+                             extra={"args": vars(args),
+                                    "sim_time": row["sim_time"]})
             for ci in range(args.population):
                 ckpt.save_client(i, ci, streams[ci].state_dict())
 

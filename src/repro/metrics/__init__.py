@@ -6,6 +6,7 @@ from repro.metrics.fedmetrics import (  # noqa: F401
     participation_metrics,
     perplexity,
     staleness_stats,
+    uplink_round_metrics,
     wallclock_speedup,
     weight_entropy,
 )

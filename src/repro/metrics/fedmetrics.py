@@ -88,6 +88,29 @@ def wallclock_speedup(sync_time: float, async_time: float) -> float:
     return float(sync_time) / max(float(async_time), 1e-12)
 
 
+# ---------------------------------------------------------------------------
+# Compressed-uplink monitors (core/compression.py codecs)
+# ---------------------------------------------------------------------------
+
+
+def uplink_round_metrics(
+    scheme: str, params_like, n_uploads: float, topk_fraction: float = 0.05
+) -> Dict[str, float]:
+    """Per-round uplink cost row: bytes one client sends under ``scheme``, bytes
+    the whole round's ``n_uploads`` uploads cost, and the compression ratio vs
+    the uncompressed float32 uplink. Uses the analytic per-leaf accounting from
+    ``uplink_bytes``, which the tier-1 tests pin to real encoded payload sizes."""
+    from repro.core.compression import uplink_bytes
+
+    per_client = uplink_bytes(params_like, scheme, topk_fraction)
+    f32 = uplink_bytes(params_like, "float32")
+    return {
+        "uplink_bytes_per_client": float(per_client),
+        "uplink_bytes_round": float(per_client) * float(n_uploads),
+        "uplink_compression_ratio": float(f32) / max(float(per_client), 1e-12),
+    }
+
+
 def evaluate_perplexity(model, params, stream, batches: int = 4, batch_size: int = 4) -> float:
     """Held-out perplexity on a validation stream (server-side evaluation, §4.2)."""
     loss_fn = jax.jit(lambda p, b: model.loss(p, b)[1]["ce"])

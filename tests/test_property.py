@@ -136,6 +136,58 @@ def test_staleness_discount_preserves_weight_ordering(weights, alpha):
 
 
 # ---------------------------------------------------------------------------
+# Compressed uplink: top-k error feedback is a contraction
+# ---------------------------------------------------------------------------
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    k_fraction=st.floats(0.01, 0.9),
+    n=st.integers(10, 300),
+    res_scale=st.floats(0.0, 2.0),
+)
+@settings(**SETTINGS)
+def test_topk_error_feedback_is_contractive(seed, k_fraction, n, res_scale):
+    """Top-k keeps the k largest-magnitude entries, so the dropped mass (the new
+    residual) satisfies ||e'||² ≤ (1 − k/n)·||x + e||² — the error-feedback
+    operator is a contraction, which is exactly the condition under which
+    EF-compressed FedAvg keeps its convergence rate (Stich et al.). Also checks
+    exact mass conservation: payload + residual == input + old residual."""
+    from repro.core.compression import topk_compress
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (n,))
+    e = res_scale * jax.random.normal(k2, (n,))
+    sparse, new_err = topk_compress({"w": x}, k_fraction, {"w": e})
+    total = np.asarray(x + e, np.float64)
+    np.testing.assert_allclose(
+        np.asarray(sparse["w"]) + np.asarray(new_err["w"]), total,
+        rtol=1e-5, atol=1e-6,
+    )
+    k = max(1, int(n * k_fraction))
+    dropped_sq = float(np.square(np.asarray(new_err["w"], np.float64)).sum())
+    total_sq = float(np.square(total).sum())
+    assert dropped_sq <= (1.0 - k / n) * total_sq + 1e-6 * max(1.0, total_sq)
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(50, 500))
+@settings(**SETTINGS)
+def test_bf16_stochastic_rounding_brackets_the_input(seed, n):
+    """Each stochastically-rounded entry must be one of the two bf16 neighbors
+    of the input — never further than one bf16 ulp away."""
+    from repro.core.compression import cast_compress
+
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    sr = cast_compress({"w": x}, rng=jax.random.PRNGKey(seed + 1))["w"]
+    det_lo = x.astype(jnp.bfloat16)
+    err = np.abs(np.asarray(sr.astype(jnp.float32)) - np.asarray(x))
+    ulp = np.abs(
+        np.asarray(det_lo.astype(jnp.float32)) * 2.0 ** -7
+    ) + 1e-30  # bf16 has 8 significand bits
+    assert (err <= 2 * ulp + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
 # Aggregation algebra
 # ---------------------------------------------------------------------------
 

@@ -162,6 +162,31 @@ def test_weighted_round_compiles_under_flat_round_shardings():
 
 
 @pytest.mark.slow
+def test_compressed_uplink_lowers_without_sharding_perturbation():
+    """Compressed uplink on the mesh (ROADMAP): the federated round with an
+    uplink codec must compile with the same bottleneck and essentially the same
+    footprint as the uncompressed elastic round — the encoded-delta dtypes ride
+    between the two phases and the (C, ...) error-feedback residuals enter under
+    the client-axis pspecs, neither perturbing the parameter/batch shardings."""
+    base = _run_dryrun("qwen3-1.7b", "train_4k", "(4, 4)", "('data', 'model')",
+                       kw={"mode": "federated", "elastic": True})
+    bf16 = _run_dryrun("qwen3-1.7b", "train_4k", "(4, 4)", "('data', 'model')",
+                       kw={"mode": "federated", "elastic": True, "uplink": "bf16"})
+    topk = _run_dryrun("qwen3-1.7b", "train_4k", "(4, 4)", "('data', 'model')",
+                       kw={"mode": "federated", "elastic": True, "uplink": "topk",
+                           "topk_fraction": 0.05})
+    assert bf16["bottleneck"] == base["bottleneck"]
+    assert bf16["flops"] == pytest.approx(base["flops"], rel=0.01)
+    # a narrower uplink can only shrink the inter-phase delta buffer
+    assert bf16["mem"] <= base["mem"] * 1.02
+    # top-k adds the per-tensor sort + the (C, ...) residual I/O — bounded, and
+    # the model-compute bottleneck classification must not change
+    assert topk["bottleneck"] == base["bottleneck"]
+    assert topk["flops"] >= base["flops"]
+    assert topk["mem"] <= base["mem"] * 1.25
+
+
+@pytest.mark.slow
 def test_federated_vs_centralized_collective_reduction():
     """Paper claim C7: per-token collective traffic of a federated round is far below
     the per-step DDP baseline at equal tokens (here with τ_lowered=4; at τ=500 the

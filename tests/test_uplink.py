@@ -1,0 +1,372 @@
+"""Compressed-uplink subsystem (core/compression.Codec × federated round × async
+buffer) semantics.
+
+The keystone identity: the IDENTITY codec threaded through the full
+encode→decode pipeline reproduces the uncompressed ``federated_round`` BITWISE —
+rng and DP-noise lanes included — so every PR 1/2 equivalence guarantee survives
+compression existing. On top: codec round-trip tolerances, byte accounting
+pinned to real payload sizes, per-client error-feedback residual ownership under
+sync cohorts and async dispatch, and residual checkpoint round-trips."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from conftest import make_batches, make_params, quad_loss, sgd_inner
+
+from repro.checkpoint import CheckpointManager
+from repro.core import (
+    STRAGGLER_PROFILES,
+    AsyncAggConfig,
+    AsyncFederationDriver,
+    Bf16Codec,
+    FederatedConfig,
+    IdentityCodec,
+    Int8Codec,
+    OuterOptConfig,
+    ParticipationConfig,
+    TopKCodec,
+    admit_deltas,
+    apply_aggregate,
+    federated_round,
+    federated_round_with_uplink,
+    get_codec,
+    init_async_state,
+    init_federated_state,
+    init_uplink_residuals,
+    run_clients,
+    uplink_bytes,
+)
+
+
+def _fed(c, tau, **kw):
+    return FederatedConfig(
+        clients_per_round=c, local_steps=tau, inner=sgd_inner(),
+        outer=OuterOptConfig(name="fedavg", lr=1.0), **kw,
+    )
+
+
+def _tree(seed=0, shapes=((64,), (16, 8), (5,))):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return {f"p{i}": jax.random.normal(k, s) for i, (k, s) in enumerate(zip(keys, shapes))}
+
+
+# ---------------------------------------------------------------------------
+# The identity-codec bitwise guarantee (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_identity_codec_reproduces_round_bitwise_incl_rng_and_dp_noise():
+    """encode→decode with the identity codec must be invisible: same params,
+    same outer state, same rng lane (so the DP-noise draw is identical), round
+    after round."""
+    tau, c = 3, 4
+    fed = FederatedConfig(
+        clients_per_round=c, local_steps=tau, inner=sgd_inner(),
+        outer=OuterOptConfig(name="fedmom", lr=0.7), dp_clip=0.1, dp_noise=0.01,
+    )
+    w = jnp.asarray([1.0, 2.0, 0.5, 3.0], jnp.float32)
+    s_plain = init_federated_state(fed, make_params(), jax.random.PRNGKey(3))
+    s_codec = init_federated_state(fed, make_params(), jax.random.PRNGKey(3))
+    plain_fn = jax.jit(
+        lambda s, b, ww: federated_round(quad_loss, fed, s, b, client_weights=ww)
+    )
+    codec_fn = jax.jit(
+        lambda s, b, ww: federated_round(
+            quad_loss, fed, s, b, client_weights=ww, codec=IdentityCodec()
+        )
+    )
+    for r in range(3):
+        b = make_batches(tau, c, seed=30 + r)
+        s_plain, m_plain = plain_fn(s_plain, b, w)
+        s_codec, m_codec = codec_fn(s_codec, b, w)
+        for a, bb in zip(
+            jax.tree_util.tree_leaves(s_plain), jax.tree_util.tree_leaves(s_codec)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+        np.testing.assert_array_equal(
+            float(m_plain["pseudo_grad_norm"]), float(m_codec["pseudo_grad_norm"])
+        )
+
+
+def test_identity_codec_bitwise_through_async_admission():
+    """The encoded-uplink async path (codec at run_clients + codec at
+    admit_deltas) with the identity codec must match the codec-free buffer."""
+    tau, c = 2, 3
+    fed = _fed(c, tau)
+    acfg = AsyncAggConfig(buffer_size=3, staleness_alpha=0.0)
+    params = make_params()
+    s0 = init_federated_state(fed, params, jax.random.PRNGKey(0))
+    batches = make_batches(tau, c)
+    tags = jnp.zeros((c,), jnp.int32)
+    w = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+
+    deltas_plain = run_clients(quad_loss, fed, s0, batches)[0]
+    deltas_codec = run_clients(quad_loss, fed, s0, batches, codec=IdentityCodec())[0]
+
+    sa = init_async_state(fed, acfg, params, jax.random.PRNGKey(0))
+    sb = init_async_state(fed, acfg, params, jax.random.PRNGKey(0))
+    sa, _ = admit_deltas(fed, acfg, sa, deltas_plain, tags, w)
+    sb, _ = admit_deltas(fed, acfg, sb, deltas_codec, tags, w, codec=IdentityCodec())
+    for a, b in zip(jax.tree_util.tree_leaves(sa), jax.tree_util.tree_leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Codec round-trips and byte accounting
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_codec_roundtrip_tolerance_and_unbiasedness():
+    codec = Bf16Codec()
+    tree = {"w": jnp.full((4000,), 0.1001, jnp.float32)}
+    det = codec.decode(codec.encode(tree)[0])  # deterministic without rng
+    assert float(jnp.max(jnp.abs(det["w"] - tree["w"]))) < 1e-3
+    sr = codec.decode(codec.encode(tree, rng=jax.random.PRNGKey(0))[0])
+    assert abs(float(sr["w"].mean()) - 0.1001) < 2e-4  # stochastic: unbiased
+
+
+def test_int8_codec_roundtrip_error_bounded_per_tensor():
+    codec = Int8Codec()
+    tree = _tree(seed=1)
+    out = codec.decode(codec.encode(tree)[0])
+    for k in tree:
+        scale = float(jnp.max(jnp.abs(tree[k]))) / 127.0
+        err = float(jnp.max(jnp.abs(out[k] - tree[k])))
+        assert err <= scale * 0.5 + 1e-6, (k, err, scale)
+
+
+def test_topk_codec_mass_conservation_and_decode_identity():
+    codec = TopKCodec(k_fraction=0.1)
+    tree = _tree(seed=2)
+    res = codec.init_residual(tree)
+    payload, new_res = codec.encode(tree, res)
+    dec = codec.decode(payload)
+    for k in tree:  # kept + dropped == input (+ zero residual) exactly
+        np.testing.assert_allclose(
+            np.asarray(dec[k] + new_res[k]), np.asarray(tree[k]), rtol=1e-6, atol=1e-7
+        )
+
+
+def test_topk_codec_rejects_degenerate_fraction():
+    with pytest.raises(ValueError):
+        TopKCodec(k_fraction=0.0)
+    with pytest.raises(ValueError):
+        TopKCodec(k_fraction=1.5)
+    with pytest.raises(ValueError):
+        get_codec("nonsense")
+
+
+@pytest.mark.parametrize("scheme", ["float32", "bf16", "int8", "topk"])
+def test_uplink_bytes_matches_actual_encoded_leaf_sizes(scheme):
+    """The analytic accounting the training loop logs must equal the measured
+    size of a real encoded payload — otherwise the comm tables are fiction."""
+    codec = get_codec(scheme, topk_fraction=0.1)
+    tree = _tree(seed=3)
+    payload, _ = codec.encode(
+        tree, codec.init_residual(tree) if codec.stateful else None
+    )
+    assert codec.payload_nbytes(payload) == uplink_bytes(tree, scheme, 0.1)
+    assert codec.nbytes(tree) == uplink_bytes(tree, scheme, 0.1)
+
+
+def test_vmapped_int8_scales_are_per_client():
+    """Cohort encode must quantize each client against ITS OWN absmax — a shared
+    scale would let one hot client wash out everyone else's resolution."""
+    codec = Int8Codec()
+    deltas = {"w": jnp.stack([jnp.ones((8,)), 100.0 * jnp.ones((8,))])}
+    payload = jax.vmap(lambda d: codec.encode(d)[0])(deltas)
+    scales = np.asarray(payload["w"]["scale"])
+    assert scales[0] == pytest.approx(1.0 / 127.0)
+    assert scales[1] == pytest.approx(100.0 / 127.0)
+
+
+# ---------------------------------------------------------------------------
+# Error feedback under weights (sync cohort)
+# ---------------------------------------------------------------------------
+
+
+def test_masked_client_residual_unchanged_in_sync_round():
+    """A zero-weight client never uploaded: its error-feedback residual must
+    come back bitwise untouched, while live clients' residuals advance."""
+    tau, c = 3, 3
+    fed = _fed(c, tau)
+    codec = TopKCodec(k_fraction=0.2)
+    params = make_params()
+    state = init_federated_state(fed, params, jax.random.PRNGKey(0))
+    res0 = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(9), (c,) + p.shape), params
+    )
+    w = jnp.asarray([1.0, 0.0, 2.0], jnp.float32)
+    new_state, metrics = federated_round(
+        quad_loss, fed, state, make_batches(tau, c), client_weights=w,
+        codec=codec, residuals=res0,
+    )
+    new_res = new_state["uplink_residuals"]
+    for k in res0:
+        old, new = np.asarray(res0[k]), np.asarray(new_res[k])
+        np.testing.assert_array_equal(new[1], old[1])  # masked: untouched
+        assert not np.array_equal(new[0], old[0])  # live: feedback advanced
+        assert not np.array_equal(new[2], old[2])
+    assert float(metrics["uplink_residual_norm"]) > 0
+
+
+def test_population_store_gather_scatter_only_touches_cohort():
+    """federated_round_with_uplink must scatter updated residuals back to
+    exactly the selected population ids — everyone else's row stays bitwise."""
+    tau, c, pop = 2, 2, 6
+    fed = _fed(c, tau)
+    codec = TopKCodec(k_fraction=0.3)
+    params = make_params()
+    state = init_federated_state(fed, params, jax.random.PRNGKey(0))
+    state["uplink_residuals"] = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(5), (pop,) + p.shape),
+        params,
+    )
+    before = jax.tree_util.tree_map(np.asarray, state["uplink_residuals"])
+    sel = jnp.asarray([4, 1])
+    new_state, _ = jax.jit(
+        lambda s, b, w, se: federated_round_with_uplink(
+            quad_loss, fed, codec, s, b, client_weights=w, selected=se
+        )
+    )(state, make_batches(tau, c), jnp.ones((c,), jnp.float32), sel)
+    after = new_state["uplink_residuals"]
+    for k in before:
+        for i in range(pop):
+            if i in (4, 1):
+                assert not np.array_equal(np.asarray(after[k])[i], before[k][i]), i
+            else:
+                np.testing.assert_array_equal(np.asarray(after[k])[i], before[k][i])
+
+
+def test_error_feedback_reinjects_dropped_mass_across_rounds():
+    """Round-over-round, the compressed updates plus the residual must track the
+    uncompressed updates: feeding the SAME deltas twice, the second payload
+    surfaces mass the first one dropped."""
+    codec = TopKCodec(k_fraction=0.1)
+    tree = {"w": jnp.arange(1.0, 101.0)}
+    res = codec.init_residual(tree)
+    p1, res = codec.encode(tree, res)
+    p2, res = codec.encode({"w": jnp.zeros(100)}, res)
+    assert float(jnp.abs(p2["w"]).sum()) > 0  # residual mass surfaced
+    # two uploads together carry everything the client ever produced
+    np.testing.assert_allclose(
+        np.asarray(p1["w"] + p2["w"] + res["w"]), np.asarray(tree["w"]), rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-client residuals under async dispatch (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _driver(codec, pop=2, k=2, tau=2, seed=3):
+    fed = FederatedConfig(
+        clients_per_round=k, local_steps=tau, inner=sgd_inner(lr=0.05),
+        outer=OuterOptConfig(name="fedavg", lr=1.0),
+    )
+    acfg = AsyncAggConfig(buffer_size=2, staleness_alpha=0.5)
+    pcfg = ParticipationConfig(
+        population=pop, clients_per_round=k,
+        straggler=STRAGGLER_PROFILES["heavy"], weighting="uniform",
+    )
+    return AsyncFederationDriver(
+        quad_loss, fed, acfg, pcfg, lambda cid: make_batches(tau, 1, seed=cid),
+        seed=seed, params=make_params(), rng=jax.random.PRNGKey(0), codec=codec,
+    ), fed, acfg, pcfg
+
+
+def test_async_alternating_clients_never_share_or_clobber_residuals():
+    """Two clients alternating dispatch: each completion must update ONLY the
+    completing client's residual row — the other row stays bitwise, across
+    buffer flushes and redispatches."""
+    drv, *_ = _driver(TopKCodec(k_fraction=0.25), pop=2, k=2)
+    leaves0 = {i: [np.asarray(l[i]) for l in jax.tree_util.tree_leaves(drv.residuals)]
+               for i in (0, 1)}
+    completions = {0: 0, 1: 0}
+    for _ in range(24):
+        ev = drv._heap[0][2]  # the event step() is about to pop
+        completes = ev.completes
+        drv.step()
+        after = {i: [np.asarray(l[i]) for l in jax.tree_util.tree_leaves(drv.residuals)]
+                 for i in (0, 1)}
+        for i in (0, 1):
+            if completes and i == ev.client:
+                completions[i] += 1
+            else:  # untouched row: bitwise identical to before this event
+                for a, b in zip(leaves0[i], after[i]):
+                    np.testing.assert_array_equal(a, b)
+        leaves0 = after
+    assert completions[0] > 0 and completions[1] > 0
+    # both clients accumulated their own (different) feedback state
+    r0 = np.concatenate([l.ravel() for l in leaves0[0]])
+    r1 = np.concatenate([l.ravel() for l in leaves0[1]])
+    assert np.abs(r0).sum() > 0 and np.abs(r1).sum() > 0
+    assert not np.array_equal(r0, r1)
+
+
+def test_async_residuals_survive_checkpoint_roundtrip(tmp_path):
+    """checkpoint_state() must round-trip the per-client residual store through
+    the CheckpointManager bitwise, and a driver restored from it must continue
+    exactly like the original."""
+    drv, fed, acfg, pcfg = _driver(TopKCodec(k_fraction=0.25), pop=4, k=2)
+    drv.run_updates(3)
+
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save_server(0, drv.checkpoint_state())
+    like = init_async_state(fed, acfg, make_params(), jax.random.PRNGKey(0))
+    like["uplink_residuals"] = init_uplink_residuals(
+        TopKCodec(k_fraction=0.25), make_params(), 4
+    )
+    restored, _ = ckpt.load_server(0, like)
+
+    for a, b in zip(
+        jax.tree_util.tree_leaves(drv.checkpoint_state()),
+        jax.tree_util.tree_leaves(restored),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    drv2 = AsyncFederationDriver(
+        quad_loss, fed, acfg, pcfg, lambda cid: make_batches(2, 1, seed=cid),
+        seed=3, state=restored, codec=TopKCodec(k_fraction=0.25),
+    )
+    for a, b in zip(
+        jax.tree_util.tree_leaves(drv.residuals),
+        jax.tree_util.tree_leaves(drv2.residuals),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_driver_counts_uplink_bytes():
+    drv, *_ = _driver(TopKCodec(k_fraction=0.25), pop=4, k=2)
+    hist = drv.run_updates(2)
+    per_upload = TopKCodec(k_fraction=0.25).nbytes(make_params())
+    assert hist[-1]["uplink_bytes_total"] >= 4 * per_upload  # ≥ 2 flushes × M=2
+    assert hist[-1]["uplink_bytes_total"] % per_upload == 0
+    assert "uplink_residual_norm" in hist[-1]
+
+
+# ---------------------------------------------------------------------------
+# Codec × weighted aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_apply_aggregate_decodes_before_weighting():
+    """Weighted aggregation of encoded payloads == weighted aggregation of the
+    decoded deltas: the weight vector must act on decoded float32 deltas."""
+    c = 3
+    fed = _fed(c, 2)
+    codec = Int8Codec()
+    params = make_params()
+    deltas = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(7), (c,) + p.shape), params
+    )
+    w = jnp.asarray([1.0, 0.0, 3.0], jnp.float32)
+    payloads = jax.vmap(lambda d: codec.encode(d)[0])(deltas)
+    decoded = jax.vmap(codec.decode)(payloads)
+
+    s0 = init_federated_state(fed, params, jax.random.PRNGKey(1))
+    a, _ = apply_aggregate(fed, s0, payloads, client_weights=w, codec=codec)
+    b, _ = apply_aggregate(fed, s0, decoded, client_weights=w)
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
