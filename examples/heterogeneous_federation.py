@@ -18,10 +18,16 @@ wire (``core/compression`` codecs); with ``topk``, every client carries its own
 error-feedback residual — under async dispatch the residuals stay keyed by client
 id across interleaved completions and buffer flushes.
 
+``--partial-progress`` swaps the deadline CUT for straggler partial progress
+(the ``core/aggregator`` seam): a slow institution contributes the τ_i steps it
+actually finished, down-weighted by τ_i/τ, instead of losing its whole round.
+
   PYTHONPATH=src python examples/heterogeneous_federation.py
   PYTHONPATH=src python examples/heterogeneous_federation.py --aggregation async --rounds 2
   PYTHONPATH=src python examples/heterogeneous_federation.py --aggregation async \
       --uplink topk --rounds 2
+  PYTHONPATH=src python examples/heterogeneous_federation.py --partial-progress \
+      --straggler-profile heavy --rounds 2
 """
 import argparse
 
@@ -38,15 +44,12 @@ from repro.core import (
     InnerOptConfig,
     OuterOptConfig,
     ParticipationConfig,
-    federated_round_with_uplink,
+    SyncAggregator,
     get_codec,
-    init_federated_state,
-    init_uplink_residuals,
-    plan_round,
     uplink_bytes,
 )
 from repro.data import PILE_CATEGORIES, build_client_streams, round_batches, validation_stream
-from repro.metrics import evaluate_perplexity
+from repro.metrics import evaluate_perplexity, partial_progress_metrics
 from repro.models import build_model
 
 TAU, CLIENTS, BATCH, SEQ, SEED = 8, 8, 2, 64, 0
@@ -63,6 +66,12 @@ def parse_args():
     ap.add_argument("--uplink", default="float32", choices=list(UPLINK_SCHEMES),
                     help="pseudo-gradient uplink codec")
     ap.add_argument("--topk-fraction", type=float, default=0.05)
+    ap.add_argument("--straggler-profile", default="heavy",
+                    choices=sorted(STRAGGLER_PROFILES),
+                    help="hardware-heterogeneity preset")
+    ap.add_argument("--partial-progress", action="store_true",
+                    help="credit stragglers their realized τ_i steps at weight "
+                         "τ_i/τ instead of cutting them at the deadline")
     return ap.parse_args()
 
 
@@ -91,8 +100,10 @@ def main():
         clients_per_round=CLIENTS,
         model="markov",
         dropout_rate=0.15,
-        straggler=STRAGGLER_PROFILES["heavy"],
+        straggler=STRAGGLER_PROFILES[args.straggler_profile],
         weighting="examples",
+        partial_progress=args.partial_progress,
+        local_steps=TAU if args.partial_progress else 0,
     )
 
     codec = (
@@ -104,37 +115,33 @@ def main():
         return
 
     params = model.init(jax.random.PRNGKey(0))
-    state = init_federated_state(fed, params)
-    if codec is not None and codec.stateful:
-        state["uplink_residuals"] = init_uplink_residuals(codec, params, CLIENTS)
     if codec is not None:
         print(f"uplink codec: {codec!r} "
               f"({uplink_bytes(params, 'float32') / codec.nbytes(params):.1f}x "
               f"fewer bytes per upload)")
-    round_fn = jax.jit(
-        lambda s, b, w, sel: federated_round_with_uplink(
-            model.loss, fed, codec, s, b, client_weights=w, selected=sel
-        )
-    )
+    # the Aggregator seam owns admission (the plan's mask / partial τ_i), the
+    # weight policy (n_k·τ_i/τ) and the checkpoint schema; the example only
+    # moves batches
+    agg = SyncAggregator(model.loss, fed, pcfg, codec=codec, seed=SEED, params=params)
     for rnd in range(args.rounds):
-        plan = plan_round(pcfg, SEED, rnd)
+        plan = agg.plan(rnd)
         # bind streams by the plan's slot ids so weights stay aligned with data
         # even when population > clients_per_round
         batches = round_batches([streams[i] for i in plan.selected], TAU, BATCH)
-        state, m = round_fn(
-            state,
-            {k: jnp.asarray(v) for k, v in batches.items()},
-            jnp.asarray(plan.weights),
-            jnp.asarray(plan.selected),
-        )
-        ppl = evaluate_perplexity(model, state["params"], val, batches=2, batch_size=BATCH)
+        m = agg.run_round({k: jnp.asarray(v) for k, v in batches.items()}, plan)
+        ppl = evaluate_perplexity(model, agg.state["params"], val, batches=2, batch_size=BATCH)
+        partial = ""
+        if args.partial_progress:
+            pm = partial_progress_metrics(plan, TAU)
+            partial = (f" tau={pm['partial_tau_mean']:.2f} "
+                       f"rescued={pm['partial_rescued_clients']:.0f}")
         print(
             f"round {rnd}: loss={float(m['train_loss']):.3f} val_ppl={ppl:.1f} "
             f"consensus={float(m['client_consensus']):.3f} "
             f"pg_norm={float(m['pseudo_grad_norm']):.4f} "
             f"eff_K={plan.effective_k}/{CLIENTS} "
             f"stragglers={plan.n_stragglers} dropped={plan.n_dropped} "
-            f"w_entropy={float(m['weight_entropy']):.2f}"
+            f"w_entropy={float(m['weight_entropy']):.2f}{partial}"
         )
     print("heterogeneous federation converged under churn (paper claims C3 + §7).")
 

@@ -3,3 +3,7 @@ from repro.checkpoint.checkpoint import (  # noqa: F401
     load_pytree,
     save_pytree,
 )
+
+# The canonical aggregator checkpoint pairs a state pytree (server.npz) with a
+# JSON-able dispatch manifest (manifest.json 'extra.aggregator') — see
+# repro.core.aggregator.Aggregator.checkpoint / AGGREGATOR_SCHEMA_VERSION.

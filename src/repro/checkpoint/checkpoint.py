@@ -85,11 +85,25 @@ class CheckpointManager:
         ]
         return max(rounds) if rounds else None
 
+    def load_manifest(self, rnd: int) -> Dict:
+        """Read a round's JSON manifest WITHOUT touching the state blob.
+
+        Resume paths need this ordering: the manifest carries the aggregator's
+        dispatch machine (``extra['aggregator']`` — schema version, cursor,
+        in-flight slot table) and the writing run's args, which together
+        determine the shape of the ``like`` template that ``load_server``
+        validates the arrays against. Host-side floats (completion times, the
+        simulated clock) live here rather than in the npz precisely because
+        JSON float reprs round-trip float64 exactly while the pytree loader
+        casts to the template dtype.
+        """
+        with open(os.path.join(self._round_dir(rnd), "manifest.json")) as f:
+            return json.load(f)
+
     def load_server(self, rnd: int, like) -> Tuple[Any, Dict]:
         d = self._round_dir(rnd)
         state = load_pytree(os.path.join(d, "server.npz"), like)
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        manifest = self.load_manifest(rnd)
         return state, manifest
 
     def load_client(self, rnd: int, client_id: int) -> Dict:

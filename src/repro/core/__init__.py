@@ -1,7 +1,14 @@
 """The paper's primary contribution: the Photon federated pre-training engine."""
+from repro.core.aggregator import (  # noqa: F401
+    AGGREGATOR_SCHEMA_VERSION,
+    Aggregator,
+    AsyncBufferAggregator,
+    AsyncFederationDriver,
+    SyncAggregator,
+    partial_progress_weights,
+)
 from repro.core.async_agg import (  # noqa: F401
     AsyncAggConfig,
-    AsyncFederationDriver,
     admit_delta,
     admit_deltas,
     flush_buffer,

@@ -1,0 +1,732 @@
+"""The unified server-side ``Aggregator`` seam (Photon's Aggregator, §4.1/§5.3).
+
+Before this module, three code paths each owned an ad-hoc slice of server
+state: the sync deadline round (``launch/train.py``'s loop), the async buffer
+(``AsyncFederationDriver``'s event loop) and the checkpoint code all decided
+independently who is admitted, at what weight, and what survives a restart.
+That made the paper's resilience claims half-reproducible: a straggler's
+partial work could not be credited anywhere, and async training could not be
+resumed at all. This module centralizes the three server-side policies behind
+one abstraction:
+
+  (a) **admission rule** — who contributes to the next outer update.
+      Sync: the ``ParticipationPlan`` mask (availability → dropout → deadline
+      cut, or the partial-progress τ_i ≥ 1 rule). Async: the buffer door —
+      zero-weight and over-``max_staleness`` arrivals are refused, everything
+      else lands in a slot (``core/async_agg.admit_delta``).
+  (b) **weight policy** — what an admitted delta counts for.
+      Sync: FedAvg data-size weights scaled by the realized fraction τ_i/τ
+      (:func:`partial_progress_weights` — the FedProx/FedNova-tradition
+      fractional credit). Async: the same fractional weight, then the FedBuff
+      staleness discount w/(1+s)^α at admission.
+  (c) **canonical checkpoint schema** — what a resumable server IS.
+      ``checkpoint()`` returns ``(state_pytree, manifest)``: the pytree holds
+      every array lane (params, outer state, rng, buffer lanes, per-client
+      error-feedback residuals, in-flight params snapshots) and the JSON-able
+      manifest holds the host-side dispatch machine (cursor, per-slot
+      completion times / dispatch indices / version tags) whose floats must
+      round-trip exactly (JSON reprs do; float32 npz casts would not).
+
+:class:`SyncAggregator` and :class:`AsyncBufferAggregator` implement the
+seam; ``federated_round`` / ``federated_round_with_uplink`` stay the pure
+jitted kernels underneath, and :class:`AsyncFederationDriver` is now a thin
+event-loop shell over the async aggregator — it owns no state of its own.
+
+Async resume (ROADMAP item 2) falls out of (c): the dispatch timeline is pure
+in ``(cfg, seed, n)`` (``core/sampler.AsyncTimeline``), so persisting the
+dispatch cursor plus each in-flight slot's ``(finish_time, dispatch_index,
+version_tag, params_snapshot)`` is sufficient to replay the event loop from a
+checkpoint *bitwise* — every future event, admission, flush and rng draw comes
+out identical to the uninterrupted run (tested). The cost is explicit: a
+checkpoint carries up to K in-flight params snapshots (leaves ``(K, ...)``).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import replace
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.async_agg import (
+    AsyncAggConfig,
+    admit_delta,
+    flush_buffer,
+    init_async_state,
+)
+from repro.core.compression import Codec
+from repro.core.federated import (
+    FederatedConfig,
+    federated_round_with_uplink,
+    init_federated_state,
+    init_uplink_residuals,
+    run_clients,
+)
+from repro.core.inner_opt import global_norm
+from repro.core.sampler import (
+    AsyncTimeline,
+    ParticipationConfig,
+    ParticipationPlan,
+    plan_round,
+)
+
+#: Version tag of the canonical checkpoint schema. Bump when the (pytree,
+#: manifest) layout changes incompatibly; restore refuses a mismatched tag
+#: instead of silently replaying a different state machine.
+AGGREGATOR_SCHEMA_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# (b) the weight policy, shared by both aggregators
+# ---------------------------------------------------------------------------
+
+
+def partial_progress_weights(weights, local_steps, tau: int) -> np.ndarray:
+    """Fractional-credit weight policy for straggler partial progress:
+    w_i = n_k,i · τ_i/τ (zero where masked).
+
+    A client that realized τ_i of the τ requested local steps contributed a
+    proportionally smaller pseudo-gradient; scaling its FedAvg data-size weight
+    by τ_i/τ keeps the aggregate an unbiased convex combination of per-step
+    progress (the FedNova normalization, property-tested). With τ_i = τ for
+    every client the scale is 1.0 exactly, so the policy is bitwise the plain
+    FedAvg weight vector — the partial-progress round then reproduces the
+    deadline round bit for bit.
+    """
+    w = np.asarray(weights, np.float32)
+    if local_steps is None:
+        return w
+    frac = np.asarray(local_steps, np.float32) / np.float32(tau)
+    return (w * frac).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# The seam
+# ---------------------------------------------------------------------------
+
+
+class Aggregator:
+    """Base of the server-side aggregation seam.
+
+    A concrete aggregator is a serializable state machine owning (a) the
+    admission rule, (b) the weight policy and (c) the canonical checkpoint
+    schema; the drivers (the sync training loop, the async event loop) only
+    move data and never decide policy. ``checkpoint()`` returns
+    ``(state_pytree, manifest)`` — the pytree goes through
+    ``checkpoint.save_pytree`` (exact array round-trip), the manifest through
+    the JSON round-side manifest (exact float64 round-trip).
+    """
+
+    kind = "base"
+
+    def checkpoint(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        raise NotImplementedError
+
+    @staticmethod
+    def validate_manifest(manifest: Dict[str, Any], kind: str) -> None:
+        """Refuse to restore from a manifest of the wrong kind or schema
+        version — a silent mismatch would replay a different state machine."""
+        if not isinstance(manifest, dict) or manifest.get("kind") != kind:
+            raise ValueError(
+                f"aggregator manifest kind {manifest.get('kind') if isinstance(manifest, dict) else manifest!r} "
+                f"does not match this aggregator ({kind!r})"
+            )
+        if int(manifest.get("schema", -1)) != AGGREGATOR_SCHEMA_VERSION:
+            raise ValueError(
+                f"aggregator checkpoint schema {manifest.get('schema')!r} != "
+                f"supported version {AGGREGATOR_SCHEMA_VERSION}"
+            )
+
+    def _manifest_header(self) -> Dict[str, Any]:
+        return {"schema": AGGREGATOR_SCHEMA_VERSION, "kind": self.kind}
+
+
+class SyncAggregator(Aggregator):
+    """Synchronous federated aggregation as a state machine.
+
+    Owns the server state pytree and the three policies:
+
+      (a) admission — the ``ParticipationPlan``'s mask: availability → dropout
+          → straggler handling. With ``partial_progress`` a slow client is
+          admitted with the τ_i = min(τ, ⌊τ·speed·deadline⌋) steps it realized
+          (cut only when τ_i < 1) instead of being dropped at the deadline.
+      (b) weight policy — FedAvg data-size weights, scaled by τ_i/τ under
+          partial progress (:func:`partial_progress_weights`).
+      (c) checkpoint schema — the state pytree (params/outer/round/rng, plus
+          the population-keyed ``uplink_residuals`` store for stateful codecs)
+          and a ``{"schema", "kind", "round"}`` manifest.
+
+    ``run_round`` drives the pure jitted kernel
+    (``federated_round_with_uplink``); weights, cohort ids and the τ-mask all
+    enter as traced arguments, so per-round participation and per-client
+    realized step counts never trigger a recompile.
+    """
+
+    kind = "sync"
+
+    def __init__(
+        self,
+        loss_fn: Callable,
+        fed: FederatedConfig,
+        pcfg: ParticipationConfig,
+        *,
+        codec: Optional[Codec] = None,
+        seed: int = 0,
+        partial_progress: bool = False,
+        params=None,
+        rng: Optional[jax.Array] = None,
+        state: Optional[Dict[str, Any]] = None,
+        shard_clients: Optional[Callable] = None,
+    ):
+        if partial_progress or pcfg.partial_progress:
+            # the aggregator owns the policy: it teaches the participation
+            # layer the round's τ so plan_round can derive per-client τ_i
+            pcfg = replace(pcfg, partial_progress=True, local_steps=fed.local_steps)
+        self.fed = fed
+        self.pcfg = pcfg
+        self.codec = codec
+        self.seed = seed
+        self.partial_progress = pcfg.partial_progress
+        if state is None:
+            state = init_federated_state(fed, params, rng)
+            if codec is not None and codec.stateful:
+                state["uplink_residuals"] = init_uplink_residuals(
+                    codec, params, pcfg.population
+                )
+        self.state = state
+        if self.partial_progress:
+            self._round_fn = jax.jit(
+                lambda s, b, w, sel, tau: federated_round_with_uplink(
+                    loss_fn, fed, codec, s, b, client_weights=w, selected=sel,
+                    shard_clients=shard_clients, tau_steps=tau,
+                )
+            )
+        else:
+            self._round_fn = jax.jit(
+                lambda s, b, w, sel: federated_round_with_uplink(
+                    loss_fn, fed, codec, s, b, client_weights=w, selected=sel,
+                    shard_clients=shard_clients,
+                )
+            )
+
+    # --- (a) admission ---------------------------------------------------
+    def plan(self, round_idx: int) -> ParticipationPlan:
+        """Resolve the round's admission decisions — pure in (cfg, seed, r)."""
+        return plan_round(self.pcfg, self.seed, round_idx)
+
+    # --- (b) weight policy -----------------------------------------------
+    def round_weights(self, plan: ParticipationPlan) -> np.ndarray:
+        """(K,) aggregation weights for the plan's cohort under this
+        aggregator's policy (fractional τ_i/τ credit when partial progress)."""
+        return partial_progress_weights(
+            plan.weights, plan.local_steps, self.fed.local_steps
+        )
+
+    def tau_steps(self, plan: ParticipationPlan) -> Optional[np.ndarray]:
+        """The (K,) τ-mask handed to the jitted round. Masked (zero-weight)
+        slots keep the FULL τ so their lanes compute exactly what the
+        non-partial round computed (their output is weight-masked anyway) —
+        this is what keeps 'everyone at full speed' bitwise identical even
+        when dropout masks part of the cohort."""
+        if plan.local_steps is None:
+            return None
+        return np.where(
+            plan.mask, plan.local_steps, self.fed.local_steps
+        ).astype(np.int32)
+
+    # --- the round -------------------------------------------------------
+    def run_round(self, batches, plan: ParticipationPlan) -> Dict[str, jax.Array]:
+        """One full round under this aggregator's policies; advances the
+        owned state and returns the jitted round's metrics."""
+        w = jnp.asarray(self.round_weights(plan))
+        sel = jnp.asarray(plan.selected)
+        if self.partial_progress:
+            tau = jnp.asarray(self.tau_steps(plan), jnp.int32)
+            self.state, metrics = self._round_fn(self.state, batches, w, sel, tau)
+        else:
+            self.state, metrics = self._round_fn(self.state, batches, w, sel)
+        return metrics
+
+    # --- (c) checkpoint schema -------------------------------------------
+    def checkpoint(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        return self.state, dict(
+            self._manifest_header(), round=int(self.state["round"])
+        )
+
+    @classmethod
+    def checkpoint_template(
+        cls,
+        fed: FederatedConfig,
+        pcfg: ParticipationConfig,
+        params_like,
+        codec: Optional[Codec] = None,
+    ) -> Dict[str, Any]:
+        """Abstract state pytree matching ``checkpoint()[0]`` — the ``like``
+        argument for ``checkpoint.load_pytree``."""
+        state = init_federated_state(fed, params_like, jax.random.PRNGKey(0))
+        if codec is not None and codec.stateful:
+            state["uplink_residuals"] = init_uplink_residuals(
+                codec, params_like, pcfg.population
+            )
+        return state
+
+
+class AsyncBufferAggregator(Aggregator):
+    """Asynchronous (FedBuff-style) buffered aggregation as a state machine.
+
+    Everything the old event-loop driver used to own now lives here, split by
+    the seam's three concerns:
+
+      (a) admission — ``admit()``: the jitted buffer door (staleness tagged
+          against the server version, zero-weight / over-``max_staleness``
+          arrivals refused without consuming a slot) plus the dispatch-side
+          rule that a population client holds at most one slot at a time.
+      (b) weight policy — ``event_weight()`` credits a completion its
+          fractional τ_i/τ under partial progress; the staleness discount
+          w/(1+s)^α is applied in-graph at admission.
+      (c) checkpoint schema — ``checkpoint()``: the server pytree (buffer
+          lanes included), the per-client error-feedback residual store, the
+          K in-flight params snapshots (stacked ``(K, ...)``) and the
+          host-side dispatch manifest (cursor, per-slot finish/index/version).
+          Because the timeline is pure in ``(cfg, seed, n)``, restoring these
+          replays the run bitwise from the checkpoint.
+
+    The event loop (``step``/``run_updates``) lives in the thin
+    :class:`AsyncFederationDriver` subclass; this class never touches data or
+    loss functions.
+    """
+
+    kind = "async"
+
+    def __init__(
+        self,
+        fed: FederatedConfig,
+        acfg: AsyncAggConfig,
+        pcfg: ParticipationConfig,
+        *,
+        seed: int = 0,
+        params=None,
+        rng: Optional[jax.Array] = None,
+        state: Optional[Dict[str, Any]] = None,
+        codec: Optional[Codec] = None,
+        dispatch: Optional[Dict[str, Any]] = None,
+    ):
+        self.fed = fed
+        self.acfg = acfg
+        self.pcfg = pcfg
+        self.codec = codec
+        self.seed = seed
+        if pcfg.partial_progress and pcfg.local_steps != fed.local_steps:
+            raise ValueError(
+                "pcfg.local_steps must equal fed.local_steps under partial "
+                f"progress (got {pcfg.local_steps} vs {fed.local_steps})"
+            )
+        stateful = codec is not None and codec.stateful
+        self._stateful = stateful
+        # (a) admission + flush as standalone jits: the flush then compiles in
+        # the same fusion context as the sync server phase, keeping the
+        # buffer_size==K / α==0 path bitwise-equal to federated_round
+        self._admit_fn = jax.jit(
+            lambda st, d, r, w: admit_delta(
+                fed, acfg, st, d, r, w, auto_flush=False, codec=codec
+            )
+        )
+        self._flush_fn = jax.jit(lambda st: flush_buffer(fed, acfg, st))
+        if state is None:
+            state = init_async_state(fed, acfg, params, rng)
+        else:
+            state = dict(state)  # may carry residuals/in-flight lanes
+        inflight = state.pop("inflight_params", None)
+        uplink_rng = state.pop("uplink_rng", None)
+        self.residuals = state.pop("uplink_residuals", None)
+        self.state = state
+        if self.residuals is not None and not stateful:
+            raise ValueError(
+                "restored state carries per-client error-feedback residuals but "
+                "the driver's codec is not stateful — pass the codec the "
+                "checkpoint was written with, or strip 'uplink_residuals' to "
+                "deliberately discard the clients' accumulated feedback"
+            )
+        if stateful and self.residuals is None:
+            self.residuals = init_uplink_residuals(
+                codec, self.state["params"], pcfg.population
+            )
+        if stateful:
+            # population-id gather/scatter as two tiny jits (traced cid — one
+            # compile each, reused for every completion)
+            self._res_gather = jax.jit(
+                lambda store, cid: jax.tree_util.tree_map(
+                    lambda r: r[cid][None], store
+                )
+            )
+            self._res_scatter = jax.jit(
+                lambda store, cid, new: jax.tree_util.tree_map(
+                    lambda r, n: r.at[cid].set(n[0]), store, new
+                )
+            )
+            self._res_norm_fn = jax.jit(global_norm)
+        self._bytes_per_upload = (
+            float(codec.nbytes(self.state["params"])) if codec is not None
+            else 4.0 * sum(
+                x.size for x in jax.tree_util.tree_leaves(self.state["params"])
+            )
+        )
+        if codec is not None:
+            # derived once per RUN from the then-current rng, never consumed in
+            # graph — restored verbatim from the checkpoint so a resumed run's
+            # stochastic-rounding draws match the uninterrupted run's
+            self._uplink_rng = (
+                uplink_rng if uplink_rng is not None
+                else jax.random.fold_in(self.state["rng"], 0x55504C4B)
+            )
+        else:
+            self._uplink_rng = None
+        self.uplink_bytes_total = 0.0  # bytes actually uploaded (incl. rejected)
+        self.timeline = AsyncTimeline(pcfg, seed)
+        self.sim_time = 0.0
+        self.work_completed = 0.0  # simulated client-time that reached the buffer
+        self.work_wasted = 0.0  # dropout / rejected-staleness client-time
+        self.n_dispatched = 0  # the dispatch CURSOR — serialized for resume
+        self._heap: List[Tuple[float, int, Any, Any, int]] = []
+        self._busy: set = set()  # population client ids currently holding a slot
+        self._losses: List[float] = []  # client train losses since last flush
+        self._staleness: List[float] = []  # admitted staleness since last flush
+        self._res_norms: List[float] = []  # EF residual norms since last flush
+        if dispatch is not None:
+            self._restore_dispatch(dispatch, inflight)
+        else:
+            for _ in range(pcfg.clients_per_round):
+                self._dispatch()
+
+    # --- dispatch machinery (serialized state) ----------------------------
+    def _dispatch(self) -> None:
+        # a client can only run in one slot at a time: skip timeline entries for
+        # clients already in flight (zero simulated cost — the scheduler simply
+        # picks the next free client from the sampler stream). Termination: at
+        # refill time at most K−1 clients are busy and every wave holds K
+        # distinct clients, so a free client appears within two waves.
+        for _ in range(64 * self.timeline.cfg.clients_per_round):
+            ev = self.timeline.dispatch(self.n_dispatched)
+            self.n_dispatched += 1
+            if ev.client not in self._busy:
+                break
+        else:  # pragma: no cover — unreachable by the argument above
+            raise RuntimeError("async dispatch starved: every client busy")
+        # every dispatch holds its client for the event duration — including an
+        # unavailable client's connect probe, during which no other slot should
+        # be contacting it either
+        self._busy.add(ev.client)
+        # snapshot by reference: jax arrays are immutable, so holding the params
+        # of up to K in-flight versions costs no copies
+        snapshot = self.state["params"] if ev.completes else None
+        version = int(self.state["round"])
+        heapq.heappush(
+            self._heap, (self.sim_time + ev.duration, ev.index, ev, snapshot, version)
+        )
+
+    def _pop_completion(self):
+        finish, _, ev, snapshot, version = heapq.heappop(self._heap)
+        self.sim_time = max(self.sim_time, finish)
+        self._busy.discard(ev.client)
+        return ev, snapshot, version
+
+    # --- (a)/(b): admission + weight policy -------------------------------
+    def event_weight(self, ev) -> float:
+        """Pre-discount credit of a completion: the plan's FedAvg weight,
+        scaled by the realized fraction τ_i/τ under partial progress (the
+        staleness discount is applied in-graph at admission)."""
+        if self.pcfg.partial_progress and ev.local_steps:
+            return float(ev.weight) * ev.local_steps / self.pcfg.local_steps
+        return float(ev.weight)
+
+    def admit(self, delta, version: int, weight: float) -> Dict[str, jax.Array]:
+        """Admit one (decoded-at-the-door) upload tagged with the model version
+        it was computed against; rejected arrivals consume nothing."""
+        self.state, m = self._admit_fn(
+            self.state, delta,
+            jnp.asarray(version, jnp.int32), jnp.asarray(weight, jnp.float32),
+        )
+        return m
+
+    def flush(self) -> Dict[str, jax.Array]:
+        """One outer update from the buffered deltas; bumps the version."""
+        self.state, m = self._flush_fn(self.state)
+        return m
+
+    def should_flush(self) -> bool:
+        return int(self.state["buf_count"]) >= self.acfg.buffer_size
+
+    # --- (c) canonical checkpoint schema ----------------------------------
+    def checkpoint_state(self) -> Dict[str, Any]:
+        """Server state + the per-client error-feedback store as ONE pytree
+        with a fixed structure (the legacy PR-3 schema — a strict subset of
+        :meth:`checkpoint`, kept for buffer-only round-trips)."""
+        if self.residuals is None:
+            return self.state
+        return dict(self.state, uplink_residuals=self.residuals)
+
+    def checkpoint(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """The canonical resumable checkpoint: ``(state_pytree, manifest)``.
+
+        The pytree extends :meth:`checkpoint_state` with ``inflight_params``
+        (the K in-flight slots' params snapshots, stacked ``(K, ...)`` in
+        manifest slot order) and, with a codec, the run's ``uplink_rng`` lane.
+        The manifest carries the host floats that must round-trip exactly
+        (finish times, sim clock) plus the dispatch cursor and per-slot
+        ``(index, version)`` tags — everything else about an in-flight event
+        is recomputed from the pure timeline at restore.
+        """
+        entries = sorted(self._heap)  # (finish, index, ...): deterministic order
+        tree = dict(self.checkpoint_state())
+        snaps = [
+            snap if snap is not None else self.state["params"]  # non-completing
+            for _, _, _, snap, _ in entries                     # slot: unused filler
+        ]
+        tree["inflight_params"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *snaps
+        )
+        if self._uplink_rng is not None:
+            tree["uplink_rng"] = self._uplink_rng
+        manifest = dict(
+            self._manifest_header(),
+            cursor=int(self.n_dispatched),
+            sim_time=float(self.sim_time),
+            work_completed=float(self.work_completed),
+            work_wasted=float(self.work_wasted),
+            uplink_bytes_total=float(self.uplink_bytes_total),
+            slots=[
+                {"finish": float(finish), "index": int(index), "version": int(ver)}
+                for finish, index, _, _, ver in entries
+            ],
+        )
+        return tree, manifest
+
+    def _restore_dispatch(self, manifest: Dict[str, Any], inflight) -> None:
+        self.validate_manifest(manifest, self.kind)
+        slots = manifest["slots"]
+        K = self.pcfg.clients_per_round
+        if len(slots) != K:
+            raise ValueError(
+                f"dispatch manifest has {len(slots)} in-flight slots but this "
+                f"configuration runs {K} — resume with the checkpoint's "
+                f"clients_per_round"
+            )
+        if inflight is None:
+            raise ValueError(
+                "dispatch manifest given but the state pytree carries no "
+                "'inflight_params' — load through the aggregator's "
+                "checkpoint_template"
+            )
+        self.n_dispatched = int(manifest["cursor"])
+        self.sim_time = float(manifest["sim_time"])
+        self.work_completed = float(manifest["work_completed"])
+        self.work_wasted = float(manifest["work_wasted"])
+        self.uplink_bytes_total = float(manifest["uplink_bytes_total"])
+        for pos, slot in enumerate(slots):
+            # the event itself is pure in (cfg, seed, index): replay it
+            ev = self.timeline.dispatch(int(slot["index"]))
+            snapshot = (
+                jax.tree_util.tree_map(lambda x, p=pos: x[p], inflight)
+                if ev.completes else None
+            )
+            heapq.heappush(
+                self._heap,
+                (float(slot["finish"]), ev.index, ev, snapshot, int(slot["version"])),
+            )
+            self._busy.add(ev.client)
+
+    @classmethod
+    def checkpoint_template(
+        cls,
+        fed: FederatedConfig,
+        acfg: AsyncAggConfig,
+        pcfg: ParticipationConfig,
+        params_like,
+        codec: Optional[Codec] = None,
+    ) -> Dict[str, Any]:
+        """Abstract state pytree matching ``checkpoint()[0]`` — the ``like``
+        argument for ``checkpoint.load_pytree`` when resuming."""
+        state = init_async_state(fed, acfg, params_like, jax.random.PRNGKey(0))
+        if codec is not None and codec.stateful:
+            state["uplink_residuals"] = init_uplink_residuals(
+                codec, params_like, pcfg.population
+            )
+        K = pcfg.clients_per_round
+        state["inflight_params"] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((K,) + p.shape, p.dtype), params_like
+        )
+        if codec is not None:
+            state["uplink_rng"] = jax.random.PRNGKey(0)
+        return state
+
+
+class AsyncFederationDriver(AsyncBufferAggregator):
+    """Event-driven simulator of the asynchronous federation (Photon §5.3) —
+    now a THIN driver over :class:`AsyncBufferAggregator`.
+
+    The driver owns only the data/compute plane: the jitted client phase
+    (``run_clients`` at C=1 against each dispatch's params snapshot) and the
+    per-update metric rows. Every policy decision and every byte of resumable
+    state — buffer lanes, residual store, dispatch cursor, in-flight slots —
+    belongs to the aggregator base, so ``checkpoint()``/``dispatch`` restore
+    replays a killed run bitwise.
+
+    ``make_batches(client_id) -> batches`` keeps the data plane outside:
+    leaves must be (τ, 1, ...) — the client axis of the shared client phase is
+    1 here, one jitted computation reused for every completion (no
+    recompiles). With ``pcfg.partial_progress`` the completion's realized τ_i
+    rides in as a traced (1,) τ-mask and the admission weight is scaled by
+    τ_i/τ (the aggregator's weight policy).
+    """
+
+    def __init__(
+        self,
+        loss_fn: Callable,
+        fed: FederatedConfig,
+        acfg: AsyncAggConfig,
+        pcfg: ParticipationConfig,
+        make_batches: Callable[[int], Dict[str, jax.Array]],
+        *,
+        seed: int = 0,
+        params=None,
+        rng: Optional[jax.Array] = None,
+        state: Optional[Dict[str, Any]] = None,
+        codec: Optional[Codec] = None,
+        dispatch: Optional[Dict[str, Any]] = None,
+    ):
+        super().__init__(
+            fed, acfg, pcfg, seed=seed, params=params, rng=rng, state=state,
+            codec=codec, dispatch=dispatch,
+        )
+        self.make_batches = make_batches
+        fed1 = replace(fed, clients_per_round=1, keep_inner_state=False)
+        stateful, partial = self._stateful, pcfg.partial_progress
+
+        # one client phase for every (codec, partial) shape: the optional lanes
+        # (per-dispatch rng for stochastic rounding, the client's EF residual
+        # row, the (1,) τ-mask) ride in a dict of traced extras
+        def _client(p, r, b, extra):
+            st = {"params": p, "round": r}
+            kw: Dict[str, Any] = {}
+            if codec is not None:
+                st["rng"] = extra["rng"]
+            if stateful:
+                kw["residuals"] = extra["res"]
+            if partial:
+                kw["tau_steps"] = extra["tau"]
+            return run_clients(loss_fn, fed1, st, b, codec=codec, **kw)
+
+        self._client_fn = jax.jit(_client)
+
+    def step(self) -> Optional[Dict[str, float]]:
+        """Advance the timeline by one completion event; dispatch a replacement.
+
+        Returns the flush metrics row when this event's admission triggered an
+        outer update, else None.
+        """
+        ev, snapshot, version = self._pop_completion()
+        row = None
+        if ev.completes:
+            # the client trained and consumed its data either way — but when the
+            # server is certain to reject the upload (staleness is known at pop
+            # time: no flush can intervene), skip the simulation's τ-step compute.
+            # Not with an error-feedback codec: the client compresses and uploads
+            # before learning of the rejection, so its residual must advance —
+            # run the client phase and let admission refuse the payload.
+            staleness = int(self.state["round"]) - version
+            rejected = 0 < self.acfg.max_staleness < staleness
+            batches = self.make_batches(ev.client)
+            if rejected and self.residuals is None:
+                self.work_wasted += ev.duration
+            else:
+                extra: Dict[str, Any] = {}
+                if self.codec is not None:
+                    # unique per dispatch: fold_in by the event's dispatch index
+                    extra["rng"] = jax.random.fold_in(self._uplink_rng, ev.index)
+                if self.pcfg.partial_progress:
+                    extra["tau"] = jnp.asarray(
+                        [ev.local_steps or self.fed.local_steps], jnp.int32
+                    )
+                if self.residuals is not None:
+                    cid = jnp.asarray(ev.client, jnp.int32)
+                    extra["res"] = self._res_gather(self.residuals, cid)
+                deltas, aux = self._client_fn(
+                    snapshot, jnp.asarray(version, jnp.int32), batches, extra
+                )
+                if self.residuals is not None:
+                    # the residual belongs to the client regardless of what the
+                    # server decides about this upload
+                    self.residuals = self._res_scatter(
+                        self.residuals, cid, aux["residuals"]
+                    )
+                    self._res_norms.append(float(self._res_norm_fn(aux["residuals"])))
+                delta = jax.tree_util.tree_map(lambda d: d[0], deltas)
+                self.uplink_bytes_total += self._bytes_per_upload
+                m = self.admit(delta, version, self.event_weight(ev))
+                if float(m["accepted"]) > 0:
+                    self.work_completed += ev.duration
+                    self._staleness.append(float(m["staleness"]))
+                    self._losses.append(float(aux["step_metrics"]["loss"][-1]))
+                else:  # rejected at admission: must not skew the flush row
+                    self.work_wasted += ev.duration
+            if self.should_flush():
+                row = self._flush_row(self.flush())
+        else:
+            self.work_wasted += ev.duration
+        self._dispatch()
+        return row
+
+    def _flush_row(self, flush_metrics) -> Dict[str, float]:
+        row = {k: float(v) for k, v in flush_metrics.items()}
+        row["sim_time"] = self.sim_time
+        row["train_loss_mean"] = (
+            float(jnp.mean(jnp.asarray(self._losses))) if self._losses else 0.0
+        )
+        row["admitted_staleness"] = list(self._staleness)
+        row["uplink_bytes_total"] = self.uplink_bytes_total
+        if self.residuals is not None:
+            row["uplink_residual_norm"] = (
+                sum(self._res_norms) / len(self._res_norms) if self._res_norms else 0.0
+            )
+        self._losses, self._staleness, self._res_norms = [], [], []
+        return row
+
+    def force_flush(self) -> Optional[Dict[str, float]]:
+        """Apply a final outer update from a partially filled buffer (end of
+        run). Returns a row shaped exactly like ``step()``'s flush rows."""
+        if int(self.state["buf_count"]) == 0:
+            return None
+        return self._flush_row(self.flush())
+
+    def run_updates(
+        self,
+        n_updates: int,
+        on_update: Optional[Callable[[int, Dict[str, float]], None]] = None,
+        max_events: Optional[int] = None,
+    ) -> List[Dict[str, float]]:
+        """Run the event loop until ``n_updates`` outer updates have been applied.
+
+        Raises if the event budget runs out first (pathologically offline
+        populations or aggressive ``max_staleness`` rejection) — a silently
+        truncated history would corrupt any wall-clock-to-loss comparison.
+        """
+        history: List[Dict[str, float]] = []
+        budget = max_events if max_events is not None else 1000 * max(1, n_updates)
+        while len(history) < n_updates and budget > 0:
+            budget -= 1
+            row = self.step()
+            if row is not None:
+                row["update"] = len(history)
+                history.append(row)
+                if on_update is not None:
+                    on_update(len(history) - 1, row)
+        if len(history) < n_updates:
+            raise RuntimeError(
+                f"async event budget exhausted after {len(history)}/{n_updates} "
+                f"outer updates (buffer admits too rarely: mostly-offline "
+                f"population, zero weights, or max_staleness rejecting "
+                f"everything) — raise max_events or loosen the configuration"
+            )
+        return history

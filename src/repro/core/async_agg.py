@@ -41,18 +41,18 @@ shared ``run_clients`` phase, the async path with ``buffer_size == K``,
 ``staleness_alpha == 0`` and all clients completing in-round reproduces the
 synchronous ``federated_round`` *bitwise* (tested).
 
-The host-side event loop (:class:`AsyncFederationDriver`) replays a simulated
-timeline from the participation layer's persistent-speed straggler model
-(:class:`~repro.core.sampler.AsyncTimeline`): the heap carries (completion-time,
-params-snapshot) pairs, the jitted client phase runs when a client "finishes",
-and the admission order — hence the whole run — is a deterministic function of
-``(config, seed)``.
+This module owns only the PURE aggregation functions. The server-side state
+machine that wraps them — admission policy, fractional/staleness weight
+policy, the dispatch cursor and in-flight slot table, and the canonical
+resumable checkpoint schema — is ``core/aggregator.AsyncBufferAggregator``,
+and the host event loop that replays the simulated
+:class:`~repro.core.sampler.AsyncTimeline` over it is the thin
+``core/aggregator.AsyncFederationDriver``.
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, replace
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,11 +62,7 @@ from repro.core.federated import (
     FederatedConfig,
     apply_aggregate,
     init_federated_state,
-    init_uplink_residuals,
-    run_clients,
 )
-from repro.core.inner_opt import global_norm
-from repro.core.sampler import AsyncTimeline, ParticipationConfig
 
 
 @dataclass(frozen=True)
@@ -287,299 +283,3 @@ def admit_deltas(
         state,
         (deltas, client_rounds.astype(jnp.int32), weights.astype(jnp.float32)),
     )
-
-
-# ---------------------------------------------------------------------------
-# Host-side event loop: the simulated asynchronous federation
-# ---------------------------------------------------------------------------
-
-
-class AsyncFederationDriver:
-    """Event-driven simulator of the asynchronous federation (Photon §5.3 async).
-
-    Holds ``K = pcfg.clients_per_round`` concurrent client slots. Each dispatch
-    snapshots the current global params + version; the client "runs" for its
-    simulated duration (τ local steps at 1/speed from the persistent straggler
-    model) and, on completion, the jitted client phase computes its delta
-    *against the snapshot* — slow clients therefore admit genuinely stale deltas
-    into later buffers instead of being masked to zero. The schedule is a pure
-    replay of :class:`~repro.core.sampler.AsyncTimeline`, so a run is a
-    deterministic function of ``(configs, seed)``.
-
-    ``make_batches(client_id) -> batches`` keeps the data plane outside: leaves
-    must be (τ, 1, ...) — the client axis of the shared client phase is 1 here,
-    one jitted computation reused for every completion (no recompiles).
-
-    With a ``codec``, each completion uploads the ENCODED payload and the server
-    decodes at admission. Error-feedback residuals are owned HERE, keyed by
-    population client id (``self.residuals``, leaves (P, ...)): a client's row is
-    gathered at its completion, consumed by its encode, and scattered back to the
-    same id — so residuals survive redispatch, interleaved completions of other
-    clients, and buffer flushes in between, and two clients can never share or
-    clobber each other's feedback state. ``checkpoint_state()`` folds the store
-    into the server-state pytree so it round-trips through the checkpoint
-    manager with everything else.
-    """
-
-    def __init__(
-        self,
-        loss_fn: Callable,
-        fed: FederatedConfig,
-        acfg: AsyncAggConfig,
-        pcfg: ParticipationConfig,
-        make_batches: Callable[[int], Dict[str, jax.Array]],
-        *,
-        seed: int = 0,
-        params=None,
-        rng: Optional[jax.Array] = None,
-        state: Optional[Dict[str, Any]] = None,
-        codec: Optional[Codec] = None,
-    ):
-        self.fed = fed
-        self.acfg = acfg
-        self.codec = codec
-        self.make_batches = make_batches
-        fed1 = replace(fed, clients_per_round=1, keep_inner_state=False)
-        stateful = codec is not None and codec.stateful
-        # with a codec the dispatched state carries a per-dispatch rng lane, so
-        # stochastic-rounding noise decorrelates across the buffer's deltas
-        # (M correlated quantization errors would not average out in the flush)
-        if stateful:
-            self._client_fn = jax.jit(
-                lambda p, r, b, e, k: run_clients(
-                    loss_fn, fed1, {"params": p, "round": r, "rng": k}, b,
-                    codec=codec, residuals=e,
-                )
-            )
-        elif codec is not None:
-            self._client_fn = jax.jit(
-                lambda p, r, b, k: run_clients(
-                    loss_fn, fed1, {"params": p, "round": r, "rng": k}, b,
-                    codec=codec,
-                )
-            )
-        else:
-            self._client_fn = jax.jit(
-                lambda p, r, b: run_clients(
-                    loss_fn, fed1, {"params": p, "round": r}, b
-                )
-            )
-        # write-only admits + a standalone jitted flush: the flush then compiles
-        # in the same fusion context as the sync server phase, keeping the
-        # buffer_size==K staleness_alpha==0 path bitwise-equal to federated_round
-        self._admit_fn = jax.jit(
-            lambda st, d, r, w: admit_delta(
-                fed, acfg, st, d, r, w, auto_flush=False, codec=codec
-            )
-        )
-        self._flush_fn = jax.jit(lambda st: flush_buffer(fed, acfg, st))
-        if state is None:
-            state = init_async_state(fed, acfg, params, rng)
-        else:
-            state = dict(state)  # may carry 'uplink_residuals' from a checkpoint
-        self.residuals = state.pop("uplink_residuals", None)
-        self.state = state
-        if self.residuals is not None and not stateful:
-            raise ValueError(
-                "restored state carries per-client error-feedback residuals but "
-                "the driver's codec is not stateful — pass the codec the "
-                "checkpoint was written with, or strip 'uplink_residuals' to "
-                "deliberately discard the clients' accumulated feedback"
-            )
-        if stateful and self.residuals is None:
-            self.residuals = init_uplink_residuals(
-                codec, self.state["params"], pcfg.population
-            )
-        if stateful:
-            # population-id gather/scatter as two tiny jits (traced cid — one
-            # compile each, reused for every completion)
-            self._res_gather = jax.jit(
-                lambda store, cid: jax.tree_util.tree_map(
-                    lambda r: r[cid][None], store
-                )
-            )
-            self._res_scatter = jax.jit(
-                lambda store, cid, new: jax.tree_util.tree_map(
-                    lambda r, n: r.at[cid].set(n[0]), store, new
-                )
-            )
-            self._res_norm_fn = jax.jit(global_norm)
-        self._bytes_per_upload = (
-            float(codec.nbytes(self.state["params"])) if codec is not None
-            else 4.0 * sum(
-                x.size for x in jax.tree_util.tree_leaves(self.state["params"])
-            )
-        )
-        if codec is not None:
-            # derived, never consumed: the server rng lane stays untouched
-            self._uplink_rng = jax.random.fold_in(self.state["rng"], 0x55504C4B)
-        self.uplink_bytes_total = 0.0  # bytes actually uploaded (incl. rejected)
-        self.timeline = AsyncTimeline(pcfg, seed)
-        self.sim_time = 0.0
-        self.work_completed = 0.0  # simulated client-time that reached the buffer
-        self.work_wasted = 0.0  # dropout / rejected-staleness client-time
-        self.n_dispatched = 0
-        self._heap: List[Tuple[float, int, Any, Any, int]] = []
-        self._busy: set = set()  # population client ids currently holding a slot
-        self._losses: List[float] = []  # client train losses since last flush
-        self._staleness: List[float] = []  # admitted staleness since last flush
-        self._res_norms: List[float] = []  # EF residual norms since last flush
-        for _ in range(pcfg.clients_per_round):
-            self._dispatch()
-
-    def _dispatch(self) -> None:
-        # a client can only run in one slot at a time: skip timeline entries for
-        # clients already in flight (zero simulated cost — the scheduler simply
-        # picks the next free client from the sampler stream). Termination: at
-        # refill time at most K−1 clients are busy and every wave holds K
-        # distinct clients, so a free client appears within two waves.
-        for _ in range(64 * self.timeline.cfg.clients_per_round):
-            ev = self.timeline.dispatch(self.n_dispatched)
-            self.n_dispatched += 1
-            if ev.client not in self._busy:
-                break
-        else:  # pragma: no cover — unreachable by the argument above
-            raise RuntimeError("async dispatch starved: every client busy")
-        # every dispatch holds its client for the event duration — including an
-        # unavailable client's connect probe, during which no other slot should
-        # be contacting it either
-        self._busy.add(ev.client)
-        # snapshot by reference: jax arrays are immutable, so holding the params
-        # of up to K in-flight versions costs no copies
-        snapshot = self.state["params"] if ev.completes else None
-        version = int(self.state["round"])
-        heapq.heappush(
-            self._heap, (self.sim_time + ev.duration, ev.index, ev, snapshot, version)
-        )
-
-    def step(self) -> Optional[Dict[str, float]]:
-        """Advance the timeline by one completion event; dispatch a replacement.
-
-        Returns the flush metrics row when this event's admission triggered an
-        outer update, else None.
-        """
-        finish, _, ev, snapshot, version = heapq.heappop(self._heap)
-        self.sim_time = max(self.sim_time, finish)
-        self._busy.discard(ev.client)
-        row = None
-        if ev.completes:
-            # the client trained and consumed its data either way — but when the
-            # server is certain to reject the upload (staleness is known at pop
-            # time: no flush can intervene), skip the simulation's τ-step compute.
-            # Not with an error-feedback codec: the client compresses and uploads
-            # before learning of the rejection, so its residual must advance —
-            # run the client phase and let admission refuse the payload.
-            staleness = int(self.state["round"]) - version
-            rejected = 0 < self.acfg.max_staleness < staleness
-            batches = self.make_batches(ev.client)
-            if rejected and self.residuals is None:
-                self.work_wasted += ev.duration
-            else:
-                if self.codec is not None:
-                    # unique per dispatch: fold_in by the event's dispatch index
-                    enc_key = jax.random.fold_in(self._uplink_rng, ev.index)
-                if self.residuals is not None:
-                    cid = jnp.asarray(ev.client, jnp.int32)
-                    cohort_res = self._res_gather(self.residuals, cid)
-                    deltas, aux = self._client_fn(
-                        snapshot, jnp.asarray(version, jnp.int32), batches,
-                        cohort_res, enc_key,
-                    )
-                    # the residual belongs to the client regardless of what the
-                    # server decides about this upload
-                    self.residuals = self._res_scatter(
-                        self.residuals, cid, aux["residuals"]
-                    )
-                    self._res_norms.append(float(self._res_norm_fn(aux["residuals"])))
-                elif self.codec is not None:
-                    deltas, aux = self._client_fn(
-                        snapshot, jnp.asarray(version, jnp.int32), batches, enc_key
-                    )
-                else:
-                    deltas, aux = self._client_fn(
-                        snapshot, jnp.asarray(version, jnp.int32), batches
-                    )
-                delta = jax.tree_util.tree_map(lambda d: d[0], deltas)
-                self.uplink_bytes_total += self._bytes_per_upload
-                self.state, m = self._admit_fn(
-                    self.state,
-                    delta,
-                    jnp.asarray(version, jnp.int32),
-                    jnp.asarray(ev.weight, jnp.float32),
-                )
-                if float(m["accepted"]) > 0:
-                    self.work_completed += ev.duration
-                    self._staleness.append(float(m["staleness"]))
-                    self._losses.append(float(aux["step_metrics"]["loss"][-1]))
-                else:  # rejected at admission: must not skew the flush row
-                    self.work_wasted += ev.duration
-            if int(self.state["buf_count"]) >= self.acfg.buffer_size:
-                self.state, fm = self._flush_fn(self.state)
-                row = self._flush_row(fm)
-        else:
-            self.work_wasted += ev.duration
-        self._dispatch()
-        return row
-
-    def _flush_row(self, flush_metrics) -> Dict[str, float]:
-        row = {k: float(v) for k, v in flush_metrics.items()}
-        row["sim_time"] = self.sim_time
-        row["train_loss_mean"] = (
-            float(jnp.mean(jnp.asarray(self._losses))) if self._losses else 0.0
-        )
-        row["admitted_staleness"] = list(self._staleness)
-        row["uplink_bytes_total"] = self.uplink_bytes_total
-        if self.residuals is not None:
-            row["uplink_residual_norm"] = (
-                sum(self._res_norms) / len(self._res_norms) if self._res_norms else 0.0
-            )
-        self._losses, self._staleness, self._res_norms = [], [], []
-        return row
-
-    def checkpoint_state(self) -> Dict[str, Any]:
-        """Server state + the per-client error-feedback store as ONE pytree with
-        a fixed structure, so it round-trips through ``CheckpointManager`` /
-        ``save_pytree`` like any other state (restore by passing it back as
-        ``state=``). Without a stateful codec this is just ``self.state``."""
-        if self.residuals is None:
-            return self.state
-        return dict(self.state, uplink_residuals=self.residuals)
-
-    def force_flush(self) -> Optional[Dict[str, float]]:
-        """Apply a final outer update from a partially filled buffer (end of
-        run). Returns a row shaped exactly like ``step()``'s flush rows."""
-        if int(self.state["buf_count"]) == 0:
-            return None
-        self.state, m = self._flush_fn(self.state)
-        return self._flush_row(m)
-
-    def run_updates(
-        self,
-        n_updates: int,
-        on_update: Optional[Callable[[int, Dict[str, float]], None]] = None,
-        max_events: Optional[int] = None,
-    ) -> List[Dict[str, float]]:
-        """Run the event loop until ``n_updates`` outer updates have been applied.
-
-        Raises if the event budget runs out first (pathologically offline
-        populations or aggressive ``max_staleness`` rejection) — a silently
-        truncated history would corrupt any wall-clock-to-loss comparison.
-        """
-        history: List[Dict[str, float]] = []
-        budget = max_events if max_events is not None else 1000 * max(1, n_updates)
-        while len(history) < n_updates and budget > 0:
-            budget -= 1
-            row = self.step()
-            if row is not None:
-                row["update"] = len(history)
-                history.append(row)
-                if on_update is not None:
-                    on_update(len(history) - 1, row)
-        if len(history) < n_updates:
-            raise RuntimeError(
-                f"async event budget exhausted after {len(history)}/{n_updates} "
-                f"outer updates (buffer admits too rarely: mostly-offline "
-                f"population, zero weights, or max_staleness rejecting "
-                f"everything) — raise max_events or loosen the configuration"
-            )
-        return history

@@ -177,11 +177,21 @@ def run_clients(
     shard_clients: Optional[Callable] = None,  # sharding-constraint hook (mesh runs)
     codec: Optional[Codec] = None,  # uplink codec; encodes the emitted deltas
     residuals: Optional[Any] = None,  # (C, ...) per-client error-feedback residuals
+    tau_steps: Optional[jax.Array] = None,  # (C,) int32 realized per-client steps τ_i
 ) -> Tuple[Any, Dict[str, Any]]:
     """Client phase of a federated round (Algorithm 1, L.4–7): broadcast θ_global
     over the client axis, τ local inner-optimizer steps per client (no cross-client
     collectives), then per-client pseudo-gradients Δ_k = θ_global − θ_k with DP
     clipping and uplink compression applied.
+
+    ``tau_steps`` is the straggler PARTIAL-PROGRESS mask: a traced (C,) vector of
+    realized step counts τ_i ≤ τ. The scan still runs all τ iterations, but a
+    client whose budget is spent (t ≥ τ_i) holds its params and inner state
+    frozen via an in-graph ``where`` — so a slow client's delta reflects exactly
+    the τ_i steps it finished, no recompile happens when the τ_i vector changes
+    round to round, and an all-full vector (τ_i = τ everywhere) is bitwise
+    identical to ``tau_steps=None`` (``where(True, new, old)`` returns ``new``
+    exactly — the same discipline as the elastic weight mask).
 
     Pure in ``(state, batches, weights, residuals)``; shared verbatim by the
     synchronous round and the async buffered path (``core/async_agg``), so the two
@@ -244,7 +254,28 @@ def run_clients(
         new_params_c, new_inner_c, metrics_c = jax.vmap(one_client)(
             params_c, inner_c, batch_t
         )
-        if elastic:  # don't let masked clients' losses pollute the round metrics
+        if tau_steps is not None:
+            # partial progress: clients whose step budget is spent hold their
+            # params/inner state (the masked scan lanes still execute, their
+            # results are discarded — exactly the elastic-weights discipline)
+            active = t < tau_steps.astype(jnp.int32)  # (C,)
+
+            def _hold(new, old):
+                return jnp.where(
+                    active.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+                )
+
+            new_params_c = jax.tree_util.tree_map(_hold, new_params_c, params_c)
+            new_inner_c = jax.tree_util.tree_map(_hold, new_inner_c, inner_c)
+            act = active.astype(jnp.float32)
+            # metrics weighted over the clients actually stepping at time t
+            # (all-active: part·1.0 ≡ part, so this recomputes metric_w exactly)
+            raw_w = part * act if elastic else act
+            n_active = jnp.sum(raw_w)
+            step_w = raw_w / jnp.maximum(n_active, 1.0)
+            step_metrics = {k: jnp.sum(v * step_w) for k, v in metrics_c.items()}
+            step_metrics["_n_active"] = n_active
+        elif elastic:  # don't let masked clients' losses pollute the round metrics
             step_metrics = {k: jnp.sum(v * metric_w) for k, v in metrics_c.items()}
         else:
             step_metrics = {k: jnp.mean(v) for k, v in metrics_c.items()}
@@ -253,6 +284,18 @@ def run_clients(
     (client_params, inner_states, _), step_metrics = jax.lax.scan(
         local_step, (client_params, inner_states, jnp.zeros((), jnp.int32)), batches
     )
+    if tau_steps is not None:
+        # DEAD steps — every weighted client past its τ_i — reduced over an
+        # empty set above: forward-fill each such step from the last step that
+        # had an active client, so step_metrics[-1] is "the last training
+        # signal observed" and the per-step series is never zero-diluted. With
+        # every client at full τ no step is dead and the gather returns the
+        # series untouched (bitwise — the tau_steps=None identity survives).
+        n_active = step_metrics.pop("_n_active")  # (τ,)
+        t_idx = jnp.arange(n_active.shape[0], dtype=jnp.int32)
+        last_live = jax.lax.cummax(jnp.where(n_active > 0, t_idx, -1))
+        last_live = jnp.maximum(last_live, 0)  # step 0 is always live (τ_i ≥ 1)
+        step_metrics = {k: v[last_live] for k, v in step_metrics.items()}
 
     if fed.keep_inner_state and elastic:
         # masked clients never actually ran this round: keep their previous inner
@@ -473,10 +516,16 @@ def federated_round(
     shard_clients: Optional[Callable] = None,  # sharding-constraint hook (mesh runs)
     codec: Optional[Codec] = None,  # uplink codec (encode client-side, decode server-side)
     residuals: Optional[Any] = None,  # (C, ...) cohort error-feedback residuals
+    tau_steps: Optional[jax.Array] = None,  # (C,) int32 realized per-client steps τ_i
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
     """One full federated round — :func:`run_clients` composed with
-    :func:`apply_aggregate`. Pure function of (state, batches, weights, residuals)
-    — jit it.
+    :func:`apply_aggregate`. Pure function of (state, batches, weights, residuals,
+    tau_steps) — jit it.
+
+    ``tau_steps`` enables straggler partial progress (see :func:`run_clients`);
+    the caller's weight policy (``core/aggregator``) is expected to scale the
+    weights by τ_i/τ so a partial delta is credited fractionally. An all-full
+    τ-vector is bitwise ``tau_steps=None``.
 
     ``client_weights`` makes the round *elastic*: a (C,) vector of aggregation
     weights (e.g. FedAvg data sizes from a ``ParticipationPlan``), where a zero
@@ -496,7 +545,7 @@ def federated_round(
     deltas, aux = run_clients(
         loss_fn, fed, state, batches,
         client_weights=client_weights, shard_clients=shard_clients,
-        codec=codec, residuals=residuals,
+        codec=codec, residuals=residuals, tau_steps=tau_steps,
     )
     new_state, agg_metrics = apply_aggregate(
         fed, state, deltas, client_weights=client_weights, codec=codec
@@ -549,6 +598,7 @@ def federated_round_with_uplink(
     client_weights: Optional[jax.Array] = None,
     selected: Optional[jax.Array] = None,  # (C,) population ids bound to the client axis
     shard_clients: Optional[Callable] = None,
+    tau_steps: Optional[jax.Array] = None,  # (C,) int32 realized per-client steps τ_i
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
     """:func:`federated_round` wired to the population-keyed residual store.
 
@@ -566,7 +616,7 @@ def federated_round_with_uplink(
     if codec is None or not codec.stateful:
         return federated_round(
             loss_fn, fed, state, batches, client_weights=client_weights,
-            shard_clients=shard_clients, codec=codec,
+            shard_clients=shard_clients, codec=codec, tau_steps=tau_steps,
         )
     if selected is None:
         raise ValueError("stateful uplink codec requires the cohort's population ids")
@@ -577,6 +627,7 @@ def federated_round_with_uplink(
     new_core, metrics = federated_round(
         loss_fn, fed, core, batches, client_weights=client_weights,
         shard_clients=shard_clients, codec=codec, residuals=cohort_res,
+        tau_steps=tau_steps,
     )
     new_cohort_res = new_core.pop("uplink_residuals")
     new_core["uplink_residuals"] = jax.tree_util.tree_map(

@@ -195,6 +195,14 @@ class ParticipationConfig:
     weighting: str = "uniform"  # uniform | examples (FedAvg data-size weights)
     examples_median: int = 2048
     examples_log_sigma: float = 0.6
+    # Straggler PARTIAL PROGRESS (FedProx/FedNova tradition, ROADMAP item 1):
+    # instead of cutting a client that misses the deadline, credit the τ_i =
+    # min(τ, ⌊τ·speed_i·deadline⌋) local steps it actually finished. The plan
+    # then carries per-slot realized step counts (``ParticipationPlan.local_steps``)
+    # and the aggregator's weight policy scales each delta by τ_i/τ
+    # (``core/aggregator.partial_progress_weights``).
+    partial_progress: bool = False
+    local_steps: int = 0  # τ — required (> 0) when partial_progress is on
 
     def __post_init__(self):
         if self.model not in ("uniform", "dirichlet", "markov"):
@@ -204,6 +212,11 @@ class ParticipationConfig:
         if self.clients_per_round > self.population:
             raise ValueError(
                 f"cannot sample {self.clients_per_round} of {self.population}"
+            )
+        if self.partial_progress and self.local_steps < 1:
+            raise ValueError(
+                "partial_progress needs the round's τ (local_steps > 0) to derive "
+                "per-client realized step counts"
             )
 
 
@@ -224,6 +237,9 @@ class ParticipationPlan:
     # (τ local steps at 1/speed, median-client-round units). The sync round caps
     # this at the deadline and discards the tail; the async aggregator replays it
     # as an event timeline, so slow clients land in later buffers instead.
+    local_steps: np.ndarray = None  # (K,) int64 — realized per-slot step counts
+    # τ_i under partial progress (None when partial_progress is off): the τ-mask
+    # input of the jitted round. 0 where masked; τ for full-speed clients.
 
     @property
     def effective_k(self) -> int:
@@ -289,18 +305,34 @@ def plan_round(cfg: ParticipationConfig, seed: int, round_idx: int) -> Participa
     dropped = mask & (u < cfg.dropout_rate)
     mask = mask & ~dropped
 
-    # 4. straggler cut: per-client wall-clock = 1/speed (median units)
+    # 4. straggler handling: per-client wall-clock = 1/speed (median units).
+    #    Deadline-cut (legacy): clients past the deadline are masked out.
+    #    Partial progress: a slow client is credited the τ_i = min(τ,
+    #    ⌊τ·speed_i·deadline⌋) local steps it realized by the deadline; only a
+    #    client too slow to finish even ONE step is still cut.
+    deadline = cfg.straggler.deadline
     speeds = client_speeds(seed, P, cfg.straggler.speed_log_sigma)[selected]
     times = 1.0 / speeds
     started = mask.copy()
     stragglers = np.zeros(K, bool)
-    if cfg.straggler.deadline > 0.0:
-        stragglers = mask & (times > cfg.straggler.deadline)
+    local_steps = None
+    if cfg.partial_progress:
+        tau = cfg.local_steps
+        if deadline > 0.0:
+            tau_i = np.minimum(tau, np.floor(tau * speeds * deadline)).astype(np.int64)
+        else:  # no deadline: everyone runs to full τ
+            tau_i = np.full(K, tau, np.int64)
+        stragglers = mask & (tau_i < 1)
+        mask = mask & ~stragglers
+        local_steps = np.where(mask, tau_i, 0)
+    elif deadline > 0.0:
+        stragglers = mask & (times > deadline)
         mask = mask & ~stragglers
     if started.any():
-        capped = times if cfg.straggler.deadline <= 0 else np.minimum(
-            times, cfg.straggler.deadline
-        )
+        capped = times if deadline <= 0 else np.minimum(times, deadline)
+        if local_steps is not None and cfg.local_steps > 0:
+            # a partial client uploads as soon as its τ_i-th step lands
+            capped = np.where(mask, (local_steps / cfg.local_steps) * times, capped)
         round_time = float(capped[started].max())
     else:
         round_time = 0.0
@@ -312,8 +344,16 @@ def plan_round(cfg: ParticipationConfig, seed: int, round_idx: int) -> Participa
         dropped[idx] = False
         stragglers[idx] = False
         unavailable[idx] = False
+        if local_steps is not None:
+            # restore the rescued client's real realized budget (its row was
+            # zeroed with the rest of the masked slots), floored at one step
+            local_steps[idx] = max(1, int(tau_i[idx]))
 
-    # 6. aggregation weights (FedAvg n_k weighting or uniform), zeroed where masked
+    # 6. aggregation weights (FedAvg n_k weighting or uniform), zeroed where
+    #    masked. Deliberately NOT scaled by τ_i/τ here: the fractional-progress
+    #    weight policy is owned by the Aggregator seam
+    #    (core/aggregator.partial_progress_weights), which composes it for both
+    #    the sync round and async admission.
     if cfg.weighting == "examples":
         n_k = client_example_counts(
             seed, P, cfg.examples_median, cfg.examples_log_sigma
@@ -332,6 +372,7 @@ def plan_round(cfg: ParticipationConfig, seed: int, round_idx: int) -> Participa
         stragglers=stragglers,
         round_time=round_time,
         times=times,
+        local_steps=local_steps,
     )
 
 
@@ -348,9 +389,11 @@ class DispatchEvent:
     wave: int  # participation wave (= plan_round index) this slot came from
     slot: int  # slot within the wave's cohort
     client: int  # population client id
-    weight: float  # pre-discount FedAvg aggregation weight (n_k or 1)
+    weight: float  # pre-discount FedAvg aggregation weight (n_k or 1) — NOT
+    # τ_i/τ-scaled: fractional-progress scaling is the aggregator's weight policy
     duration: float  # simulated busy time, median-client-round units
     completes: bool  # False: never produced a delta (unavailable / dropped out)
+    local_steps: int = 0  # realized τ_i under partial progress (0 = full τ)
 
 
 class AsyncTimeline:
@@ -370,12 +413,23 @@ class AsyncTimeline:
     and mid-round dropout all still apply. Unavailable slots cost a small
     connection-attempt time so a mostly-offline population cannot spin the event
     loop at zero simulated cost.
+
+    With ``cfg.partial_progress`` the deadline is kept but reinterpreted as a
+    per-dispatch time *budget*: a slow client trains for τ_i = min(τ,
+    ⌊τ·speed·deadline⌋) steps, uploads early (``duration`` shrinks to
+    (τ_i/τ)·time), and the event carries ``local_steps`` so the aggregator can
+    admit the delta at the fractional τ_i/τ weight. A client too slow for even
+    one step holds its slot until the budget expires and produces nothing.
     """
 
     CONNECT_COST = 0.05  # failed-dispatch probe, median-client-round units
 
     def __init__(self, cfg: ParticipationConfig, seed: int):
-        self.cfg = replace(cfg, straggler=replace(cfg.straggler, deadline=0.0))
+        if cfg.partial_progress:
+            # keep the deadline: plan_round turns it into per-client τ_i budgets
+            self.cfg = cfg
+        else:
+            self.cfg = replace(cfg, straggler=replace(cfg.straggler, deadline=0.0))
         self.seed = seed
         self._plan_cache: Dict[int, ParticipationPlan] = {}
 
@@ -397,6 +451,18 @@ class AsyncTimeline:
             # then freed with nothing to show for it
             return DispatchEvent(
                 n, wave, slot, client, 0.0, 0.5 * float(plan.times[slot]), False
+            )
+        if plan.local_steps is not None:  # partial progress: deadline = budget
+            tau_i = int(plan.local_steps[slot])
+            if tau_i < 1:  # can't finish one step inside the budget: nothing
+                return DispatchEvent(
+                    n, wave, slot, client, 0.0,
+                    float(self.cfg.straggler.deadline), False, 0,
+                )
+            duration = float(plan.times[slot]) * tau_i / self.cfg.local_steps
+            return DispatchEvent(
+                n, wave, slot, client,
+                float(plan.weights[slot]), duration, True, tau_i,
             )
         return DispatchEvent(
             n, wave, slot, client,

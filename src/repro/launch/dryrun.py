@@ -38,6 +38,10 @@ def main() -> None:
                          "encoded-delta dtypes are carried through the mesh "
                          "lowering (residual inputs sharded like the client axis)")
     ap.add_argument("--topk-fraction", type=float, default=0.05)
+    ap.add_argument("--partial-progress", action="store_true",
+                    help="thread the (C,) straggler partial-progress τ-mask "
+                         "through the federated round (replicated int32 input "
+                         "consumed inside the scan — shardings unperturbed)")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="", help="suffix for result filenames (perf iters)")
     args = ap.parse_args()
@@ -92,6 +96,7 @@ def main() -> None:
                                 elastic=not args.no_elastic,
                                 uplink=args.uplink,
                                 topk_fraction=args.topk_fraction,
+                                partial_progress=args.partial_progress,
                             )
                         with mesh:
                             step = build_step(cfg, shape_name, mesh, **kw)

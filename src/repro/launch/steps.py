@@ -253,6 +253,7 @@ def build_train_step(
     elastic: bool = True,
     uplink: str = "float32",
     topk_fraction: float = 0.05,
+    partial_progress: bool = False,
 ) -> BuiltStep:
     model = build_model(cfg)
     loss_fn = lambda p, b: model.loss(p, b, remat=remat)
@@ -284,38 +285,47 @@ def build_train_step(
             )
 
         codec = get_codec(uplink, topk_fraction) if uplink != "float32" else None
-        step = jax.jit(
-            functools.partial(
-                federated_round, loss_fn, fed,
-                shard_clients=shard_clients, codec=codec,
+        stateful = codec is not None and codec.stateful
+        if (stateful or partial_progress) and not elastic:
+            raise ValueError(
+                "stateful uplink codecs and partial progress require the "
+                "elastic round"
             )
-        )
         batches = input_specs(cfg, shape, mesh, tau_lowered=tau_lowered, mode="federated")
         # elastic participation on the mesh: the (C,) weight vector enters the
         # jitted round as a replicated traced input — dropouts / stragglers /
         # K_eff < C on the production mesh never trigger a recompile, exactly
         # like the CPU driver. All-ones weights are bitwise the flat round.
+        # The partial-progress τ-mask rides the same way: a replicated (C,)
+        # int32 input consumed inside the scan, so per-round realized step
+        # counts change freely without perturbing any sharding.
         args = (state, batches)
+        arg_names = []
         if elastic:
             args = args + (_sds((C,), jnp.float32, mesh, P()),)
-        if codec is not None and codec.stateful:
+            arg_names.append("client_weights")
+        if stateful:
             # per-client error-feedback residuals ride the mesh exactly like the
             # (C, ...) client-axis params replicas: same clientized pspecs, so
             # the encoded-uplink round cannot perturb the parameter shardings
-            if not elastic:
-                raise ValueError("stateful uplink codecs require the elastic round")
             res_shapes = jax.eval_shape(
                 lambda: init_uplink_residuals(
                     codec, model.init(jax.random.PRNGKey(0)), C
                 )
             )
             args = args + (_tree_sds(res_shapes, client_pspecs, mesh),)
-            step = jax.jit(
-                lambda s, b, w, res: federated_round(
-                    loss_fn, fed, s, b, client_weights=w,
-                    shard_clients=shard_clients, codec=codec, residuals=res,
-                )
+            arg_names.append("residuals")
+        if partial_progress:
+            args = args + (_sds((C,), jnp.int32, mesh, P()),)
+            arg_names.append("tau_steps")
+
+        def _round(s, b, *rest):
+            kw = dict(zip(arg_names, rest))
+            return federated_round(
+                loss_fn, fed, s, b, shard_clients=shard_clients, codec=codec, **kw
             )
+
+        step = jax.jit(_round)
         tokens_per_round = tau_lowered * shape.global_batch * shape.seq_len
         mf = 6.0 * cfg.active_param_count() * tokens_per_round
         return BuiltStep(
@@ -332,6 +342,7 @@ def build_train_step(
                 "fsdp_axes": list(fsdp_ax),
                 "elastic": elastic,
                 "uplink": uplink,
+                "partial_progress": partial_progress,
             },
         )
 

@@ -37,14 +37,32 @@ residuals are keyed by population client id (one row per client, under sync
 cohorts AND async dispatch), live inside the checkpointed state, and resume
 exactly; per-round uplink bytes / compression ratio / residual norms are logged.
 
+Straggler partial progress (``--partial-progress``, ROADMAP item 1): instead of
+cutting a slow client at the deadline, credit the τ_i = min(τ,
+⌊τ·speed·deadline⌋) local steps it actually finished — the jitted round holds a
+spent client's lanes via a traced (K,) τ-mask (no recompile as τ_i varies) and
+the Aggregator's weight policy scales its delta by τ_i/τ. Under async the
+deadline becomes a per-dispatch budget and the partial delta admits at the
+fractional weight. Per-round mean τ_i/τ, full-τ fraction and rescued-compute
+estimates are logged.
+
+Server-side aggregation is driven through the unified ``Aggregator`` seam
+(``core/aggregator.py``): ``SyncAggregator`` / ``AsyncFederationDriver`` own
+the admission rule, the weight policy and the canonical checkpoint schema —
+which is what makes ``--aggregation async --resume`` exact: every update
+checkpoints the buffer lanes, residual store, dispatch cursor and in-flight
+params snapshots, and a killed-and-resumed run is bitwise the uninterrupted one.
+
 Usage (CPU, minutes):
   PYTHONPATH=src python -m repro.launch.train --arch photon-75m --reduced \
       --rounds 4 --local-steps 8 --clients 4 --population 8
   PYTHONPATH=src python -m repro.launch.train --reduced --rounds 2 \
       --participation markov --dropout-rate 0.25 --straggler-profile mild
   PYTHONPATH=src python -m repro.launch.train --reduced --rounds 4 \
+      --straggler-profile heavy --partial-progress
+  PYTHONPATH=src python -m repro.launch.train --reduced --rounds 4 \
       --aggregation async --buffer-size 2 --straggler-profile heavy \
-      --uplink topk --topk-fraction 0.05
+      --uplink topk --topk-fraction 0.05 --ckpt-dir /tmp/ck   # then --resume
 """
 from __future__ import annotations
 
@@ -64,21 +82,21 @@ from repro.core import (
     STRAGGLER_PROFILES,
     UPLINK_SCHEMES,
     AsyncAggConfig,
+    AsyncBufferAggregator,
     AsyncFederationDriver,
     FederatedConfig,
     InnerOptConfig,
     OuterOptConfig,
     ParticipationConfig,
-    federated_round_with_uplink,
+    SyncAggregator,
     get_codec,
-    init_federated_state,
-    init_uplink_residuals,
     plan_round,
 )
 from repro.data import build_client_streams, round_batches, validation_stream
 from repro.metrics import (
     MetricLogger,
     evaluate_perplexity,
+    partial_progress_metrics,
     participation_metrics,
     perplexity,
     staleness_stats,
@@ -131,6 +149,15 @@ def parse_args(argv=None):
     )
     ap.add_argument("--deadline", type=float, default=None,
                     help="round deadline in median-client-round units (overrides profile)")
+    ap.add_argument(
+        "--partial-progress", action="store_true",
+        help="straggler partial progress: a client that misses the deadline "
+             "contributes the τ_i = min(τ, ⌊τ·speed·deadline⌋) local steps it "
+             "actually finished, weighted by τ_i/τ, instead of being cut "
+             "(sync) or arriving late (async: the deadline becomes a "
+             "per-dispatch budget and partial deltas admit at fractional "
+             "weight)",
+    )
     ap.add_argument(
         "--client-weighting", default="uniform", choices=["uniform", "examples"],
         help="aggregation weights: uniform mean or FedAvg data-size (n_k) weighting",
@@ -214,11 +241,6 @@ def run(args, cfg=None) -> dict:
     )
 
     if args.aggregation == "async":
-        if args.resume:
-            raise SystemExit(
-                "--resume with --aggregation async is not supported yet: the "
-                "in-flight client queue is not checkpointed (see ROADMAP)"
-            )
         if args.keep_opt:
             raise SystemExit(
                 "--keep-opt with --aggregation async is not supported: async "
@@ -228,20 +250,44 @@ def run(args, cfg=None) -> dict:
             )
         return _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec)
 
-    state = init_federated_state(fed, params, jax.random.PRNGKey(args.seed + 1))
-    if codec is not None and codec.stateful:
-        # one error-feedback residual row per POPULATION client: the cohort's
-        # rows are gathered/scattered by id inside the jitted round, and the
-        # whole store checkpoints/resumes with the rest of the server state
-        state["uplink_residuals"] = init_uplink_residuals(codec, params, args.population)
+    def loss_fn(p, b):
+        return model.loss(p, b)
+
+    # the Aggregator seam owns (a) the admission rule (the plan's mask /
+    # partial-progress τ_i), (b) the weight policy (FedAvg n_k scaled by τ_i/τ)
+    # and (c) the checkpoint schema. Weights, cohort ids and the τ-mask enter
+    # the jitted round as traced arguments: per-round participation changes
+    # (dropouts, stragglers, K_eff < K, realized τ_i) never trigger a recompile.
+    agg = SyncAggregator(
+        loss_fn, fed, pcfg, codec=codec, seed=args.seed,
+        partial_progress=args.partial_progress,
+        params=params, rng=jax.random.PRNGKey(args.seed + 1),
+    )
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     start_round = 0
     if ckpt and args.resume:
         latest = ckpt.latest_round()
         if latest is not None:
+            agg_man = ckpt.load_manifest(latest).get("extra", {}).get("aggregator")
+            if agg_man is not None:
+                if agg_man.get("kind") != "sync":
+                    # load_pytree would silently satisfy the sync template from
+                    # an async checkpoint's npz (the sync keys are a strict
+                    # subset of the async schema) — refuse the kind mismatch
+                    raise SystemExit(
+                        f"--resume: checkpoint round {latest} was written by a "
+                        f"--aggregation {agg_man.get('kind')} run; resuming it "
+                        f"synchronously would silently drop the buffer lanes "
+                        f"and the in-flight dispatch queue — resume with the "
+                        f"original aggregation mode or start fresh"
+                    )
+                try:
+                    SyncAggregator.validate_manifest(agg_man, "sync")
+                except ValueError as e:
+                    raise SystemExit(f"--resume: {e}")
             try:
-                state, manifest = ckpt.load_server(latest, state)
+                state, manifest = ckpt.load_server(latest, agg.state)
             except KeyError as e:
                 raise SystemExit(
                     f"--resume: checkpoint round {latest} does not carry the "
@@ -266,6 +312,7 @@ def run(args, cfg=None) -> dict:
                     f"{args.uplink} would silently discard them — use the "
                     f"original codec or start fresh"
                 )
+            agg.state = state
             start_round = latest + 1
             for i, s in enumerate(streams):
                 try:
@@ -276,28 +323,14 @@ def run(args, cfg=None) -> dict:
 
     logger = MetricLogger(args.log) if args.log else None
 
-    def loss_fn(p, b):
-        return model.loss(p, b)
-
-    # weights and cohort ids enter as traced (K,) arguments: per-round
-    # participation changes (dropouts, stragglers, K_eff < K, which population
-    # clients were picked) never trigger a recompile
-    round_fn = jax.jit(
-        lambda s, b, w, sel: federated_round_with_uplink(
-            loss_fn, fed, codec, s, b, client_weights=w, selected=sel
-        )
-    )
-
     history = []
     for rnd in range(start_round, args.rounds):
         t0 = time.time()
-        plan = plan_round(pcfg, args.seed, rnd)
+        plan = agg.plan(rnd)
         sel = plan.selected
         batches_np = round_batches([streams[i] for i in sel], args.local_steps, args.batch)
         batches = {k: jnp.asarray(v) for k, v in batches_np.items()}
-        state, metrics = round_fn(
-            state, batches, jnp.asarray(plan.weights), jnp.asarray(sel)
-        )
+        metrics = agg.run_round(batches, plan)
         metrics = {k: float(v) for k, v in metrics.items()}
         metrics.update(
             round=rnd,
@@ -306,34 +339,60 @@ def run(args, cfg=None) -> dict:
             seconds=time.time() - t0,
             train_ppl=perplexity(metrics["train_loss"]),
             **participation_metrics(plan),
+            **partial_progress_metrics(plan, args.local_steps),
             **uplink_round_metrics(
                 args.uplink, params, plan.effective_k, args.topk_fraction
             ),
         )
         val_ppl = evaluate_perplexity(
-            model, state["params"], val_stream, batches=args.eval_batches,
+            model, agg.state["params"], val_stream, batches=args.eval_batches,
             batch_size=args.batch,
         )
         metrics["val_ppl"] = val_ppl
         history.append(metrics)
+        partial = (
+            f" tau={metrics['partial_tau_mean']:.2f} "
+            f"rescued={metrics['partial_rescued_clients']:.0f}"
+            if args.partial_progress else ""
+        )
         print(
             f"round {rnd}: loss={metrics['train_loss']:.4f} val_ppl={val_ppl:.2f} "
             f"pg_norm={metrics['pseudo_grad_norm']:.4f} "
             f"consensus={metrics['client_consensus']:.3f} "
             f"eff_K={plan.effective_k}/{args.clients} "
-            f"stragglers={plan.n_stragglers} dropped={plan.n_dropped} "
-            f"[{metrics['seconds']:.1f}s]"
+            f"stragglers={plan.n_stragglers} dropped={plan.n_dropped}"
+            f"{partial} [{metrics['seconds']:.1f}s]"
         )
         if logger:
             logger.log(metrics)
         if ckpt:
-            ckpt.save_server(rnd, state, extra={"args": vars(args)})
+            tree, agg_manifest = agg.checkpoint()
+            ckpt.save_server(
+                rnd, tree, extra={"args": vars(args), "aggregator": agg_manifest}
+            )
             # every client's data cursor (unselected clients keep theirs unchanged;
             # saving all makes any round a complete resume point)
             for i in range(args.population):
                 ckpt.save_client(rnd, i, streams[i].state_dict())
 
-    return {"history": history, "state": state, "model": model, "config": cfg}
+    return {"history": history, "state": agg.state, "model": model, "config": cfg,
+            "aggregator": agg}
+
+
+# args whose value changes the pure dispatch timeline, the data every client
+# draws, or the optimizer/buffer semantics: an async resume with any of these
+# altered would silently replay a DIFFERENT run ("--rounds" alone may change —
+# extending the run is the point of resuming, though it re-derives the inner
+# LR schedule's total_steps exactly as sync resume does)
+_ASYNC_RESUME_ARGS = (
+    "seed", "clients", "population", "local_steps", "batch", "buffer_size",
+    "staleness_alpha", "max_staleness", "participation", "dirichlet_alpha",
+    "dropout_rate", "straggler_profile", "deadline", "client_weighting",
+    "uplink", "topk_fraction", "partial_progress",
+    "arch", "reduced", "seq_len", "heterogeneous",
+    "inner_lr", "outer", "outer_lr", "fedprox_mu",
+    "dp_clip", "dp_noise", "pseudo_grad_dtype",
+)
 
 
 def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=None) -> dict:
@@ -341,8 +400,11 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
     delta buffer, one outer update per ``--buffer-size`` admitted deltas.
 
     With ``codec``, completions upload encoded payloads (decoded at admission)
-    and the driver owns one error-feedback residual row per population client —
-    the rows ride along in every checkpoint via ``driver.checkpoint_state()``.
+    and the driver owns one error-feedback residual row per population client.
+    Every update checkpoints the aggregator's CANONICAL schema — buffer lanes,
+    residual store, dispatch cursor, in-flight slot table and params snapshots
+    — so ``--resume`` replays the pure-in-(cfg, seed, n) timeline from the
+    checkpoint exactly: the resumed run is bitwise the uninterrupted one.
     """
     acfg = AsyncAggConfig(
         buffer_size=(
@@ -352,6 +414,12 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
         staleness_alpha=args.staleness_alpha,
         max_staleness=args.max_staleness,
     )
+    if args.partial_progress:
+        # the deadline becomes a per-dispatch budget: plan_round derives τ_i and
+        # the aggregator admits partial deltas at the fractional τ_i/τ weight
+        pcfg = dataclasses.replace(
+            pcfg, partial_progress=True, local_steps=args.local_steps
+        )
 
     def loss_fn(p, b):
         return model.loss(p, b)
@@ -360,14 +428,59 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
         b = round_batches([streams[cid]], args.local_steps, args.batch)
         return {k: jnp.asarray(v) for k, v in b.items()}
 
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    logger = MetricLogger(args.log) if args.log else None
+
+    state = dispatch = None
+    start_update = 0
+    deltas_resumed = 0
+    if args.resume:
+        if ckpt is None:
+            raise SystemExit("--resume with --aggregation async needs --ckpt-dir")
+        latest = ckpt.latest_round()
+        if latest is not None:
+            manifest = ckpt.load_manifest(latest)
+            extra = manifest.get("extra", {})
+            dispatch = extra.get("aggregator")
+            if not isinstance(dispatch, dict) or dispatch.get("kind") != "async":
+                raise SystemExit(
+                    f"--resume: checkpoint round {latest} carries no async "
+                    f"aggregator manifest (written before the resumable schema, "
+                    f"or by a sync run) — the in-flight dispatch queue cannot "
+                    f"be replayed; start fresh"
+                )
+            ck_args = extra.get("args", {})
+            for key in _ASYNC_RESUME_ARGS:
+                ours, theirs = getattr(args, key), ck_args.get(key)
+                if theirs is not None or ours is not None:
+                    if ours != theirs:
+                        raise SystemExit(
+                            f"--resume: --{key.replace('_', '-')}={ours} does not "
+                            f"match the checkpoint's {theirs} — the async "
+                            f"timeline is pure in (config, seed), so resuming "
+                            f"under a different configuration would silently "
+                            f"replay a different run"
+                        )
+            like = AsyncBufferAggregator.checkpoint_template(
+                fed, acfg, pcfg, params, codec
+            )
+            state, _ = ckpt.load_server(latest, like)
+            start_update = latest + 1
+            deltas_resumed = int(extra.get("train", {}).get("deltas_admitted", 0))
+            for i, s in enumerate(streams):
+                try:
+                    s.load_state_dict(ckpt.load_client(latest, i))
+                except FileNotFoundError:
+                    pass
+            print(f"resumed async run from update {latest} "
+                  f"(dispatch cursor {dispatch['cursor']}, "
+                  f"sim_time {dispatch['sim_time']:.2f})")
+
     driver = AsyncFederationDriver(
         loss_fn, fed, acfg, pcfg, make_batches,
         seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
-        codec=codec,
+        codec=codec, state=state, dispatch=dispatch,
     )
-
-    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-    logger = MetricLogger(args.log) if args.log else None
 
     # reference: what the deadline-masking sync schedule pays to aggregate the
     # same number of client deltas (cached cumulative replay of plan_round)
@@ -381,10 +494,11 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
         return sync_cum[-1][0] if sync_cum[-1][1] >= n_deltas else float("inf")
 
     history = []
-    deltas_admitted = [0]
+    deltas_admitted = [deltas_resumed]
     t_wall = [time.time()]
 
     def on_update(i, row):
+        u = start_update + i  # absolute outer-update index across resumes
         # mean/max staleness + buffer occupancy come in-graph from flush_buffer;
         # the host side only adds the histogram buckets of the admitted ages
         staleness = row.pop("admitted_staleness", [])
@@ -400,8 +514,8 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
             )
         )
         row.update(
-            update=i,
-            round=i,  # outer-update index, the async analogue of the round
+            update=u,
+            round=u,  # outer-update index, the async analogue of the round
             deltas_admitted=float(deltas_admitted[0]),
             wallclock_speedup=wallclock_speedup(
                 sync_equiv_time(deltas_admitted[0]), row["sim_time"]
@@ -419,7 +533,7 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
         )
         history.append(row)
         print(
-            f"update {i}: loss={row['train_loss_mean']:.4f} "
+            f"update {u}: loss={row['train_loss_mean']:.4f} "
             f"val_ppl={row['val_ppl']:.2f} "
             f"pg_norm={row['pseudo_grad_norm']:.4f} "
             f"staleness={row['staleness_mean']:.2f}/{row['staleness_max']:.0f} "
@@ -430,17 +544,25 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
         if logger:
             logger.log(row)
         if ckpt:
-            # the buffer lanes (and, with a stateful codec, the per-client
-            # error-feedback residual store) live inside one state pytree, so a
-            # checkpoint taken between flushes preserves partially aggregated
-            # work and every client's residual
-            ckpt.save_server(i, driver.checkpoint_state(),
-                             extra={"args": vars(args),
-                                    "sim_time": row["sim_time"]})
+            # the CANONICAL aggregator checkpoint: buffer lanes, the residual
+            # store, the K in-flight params snapshots (state pytree) plus the
+            # dispatch cursor / per-slot finish-time+version tags (manifest) —
+            # everything `--resume` needs to replay the run bitwise
+            tree, agg_manifest = driver.checkpoint()
+            ckpt.save_server(
+                u, tree,
+                extra={"args": vars(args), "aggregator": agg_manifest,
+                       "train": {"deltas_admitted": deltas_admitted[0]},
+                       "sim_time": row["sim_time"]},
+            )
             for ci in range(args.population):
-                ckpt.save_client(i, ci, streams[ci].state_dict())
+                ckpt.save_client(u, ci, streams[ci].state_dict())
 
-    driver.run_updates(args.rounds, on_update=on_update)
+    if args.rounds > start_update:
+        driver.run_updates(args.rounds - start_update, on_update=on_update)
+    else:
+        print(f"nothing to do: checkpoint already at update {start_update - 1} "
+              f"of {args.rounds}")
     return {"history": history, "state": driver.state, "model": model,
             "config": cfg, "driver": driver}
 

@@ -3,6 +3,7 @@ from repro.metrics.fedmetrics import (  # noqa: F401
     activation_l2_probe,
     effective_clients,
     evaluate_perplexity,
+    partial_progress_metrics,
     participation_metrics,
     perplexity,
     staleness_stats,

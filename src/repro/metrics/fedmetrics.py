@@ -51,6 +51,55 @@ def participation_metrics(plan) -> Dict[str, float]:
     }
 
 
+def partial_progress_metrics(plan, tau: int) -> Dict[str, float]:
+    """Per-round straggler partial-progress monitors (core/aggregator weight
+    policy): how much of the requested τ the cohort actually realized, and how
+    much compute the deadline-cut baseline would have thrown away.
+
+    - ``partial_tau_mean``: mean realized fraction τ_i/τ over the contributors
+      (1.0 = nobody was slowed).
+    - ``partial_full_fraction``: fraction of contributors that finished all τ
+      steps.
+    - ``partial_rescued_clients`` / ``partial_rescued_work``: the clients the
+      deadline cut would have dropped entirely, and the client-rounds of
+      compute (Σ τ_i/τ) their partial deltas salvage instead.
+    - ``partial_wasted_work``: client-rounds still burned this round — clients
+      too slow for even one step hold their slot until the deadline
+      (deadline·speed ≈ the fraction of a full round they computed for
+      nothing), plus the plain deadline-cut waste when partial progress is off.
+
+    Returns ``{}``-compatible zeros when the plan carries no ``local_steps``
+    (partial progress disabled), so the logging row stays schema-stable.
+    """
+    mask = np.asarray(plan.mask)
+    speeds_all = np.asarray(plan.speeds, np.float64)
+    if plan.local_steps is None:
+        # deadline-cut baseline: a cut straggler ran until the deadline (≈ the
+        # round time) and every one of those client-rounds was discarded
+        cut = np.asarray(plan.stragglers)
+        return {
+            "partial_tau_mean": 1.0 if mask.any() else 0.0,
+            "partial_full_fraction": 1.0 if mask.any() else 0.0,
+            "partial_rescued_clients": 0.0,
+            "partial_rescued_work": 0.0,
+            "partial_wasted_work": float(
+                np.minimum(1.0, plan.round_time * speeds_all[cut]).sum()
+            ),
+        }
+    ls = np.asarray(plan.local_steps, np.float64)
+    frac = ls[mask] / float(tau)
+    rescued = mask & (ls < tau)  # clients the deadline cut would have dropped
+    cut = np.asarray(plan.stragglers)  # still dropped: τ_i < 1
+    wasted = float(np.minimum(1.0, plan.round_time * speeds_all[cut]).sum())
+    return {
+        "partial_tau_mean": float(frac.mean()) if mask.any() else 0.0,
+        "partial_full_fraction": float((ls[mask] >= tau).mean()) if mask.any() else 0.0,
+        "partial_rescued_clients": float(rescued.sum()),
+        "partial_rescued_work": float((ls[rescued] / float(tau)).sum()),
+        "partial_wasted_work": wasted,
+    }
+
+
 # ---------------------------------------------------------------------------
 # Async-aggregation monitors (FedBuff-style buffer, core/async_agg.py)
 # ---------------------------------------------------------------------------

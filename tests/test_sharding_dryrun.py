@@ -162,6 +162,24 @@ def test_weighted_round_compiles_under_flat_round_shardings():
 
 
 @pytest.mark.slow
+def test_partial_progress_mask_lowers_without_sharding_perturbation():
+    """Straggler partial progress on the mesh (ISSUE 4): the federated round
+    with the (C,) τ-mask input must compile with the same bottleneck, FLOPs,
+    collective traffic and footprint as the plain elastic round — the realized
+    step counts ride along as a replicated traced int32 vector consumed inside
+    the scan, and must not perturb the parameter/batch shardings."""
+    base = _run_dryrun("qwen3-1.7b", "train_4k", "(4, 4)", "('data', 'model')",
+                       kw={"mode": "federated", "elastic": True})
+    partial = _run_dryrun("qwen3-1.7b", "train_4k", "(4, 4)", "('data', 'model')",
+                          kw={"mode": "federated", "elastic": True,
+                              "partial_progress": True})
+    assert partial["bottleneck"] == base["bottleneck"]
+    assert partial["flops"] == pytest.approx(base["flops"], rel=0.01)
+    assert partial["coll"] == pytest.approx(base["coll"], rel=0.01)
+    assert partial["mem"] == pytest.approx(base["mem"], rel=0.02)
+
+
+@pytest.mark.slow
 def test_compressed_uplink_lowers_without_sharding_perturbation():
     """Compressed uplink on the mesh (ROADMAP): the federated round with an
     uplink codec must compile with the same bottleneck and essentially the same
