@@ -27,6 +27,7 @@ from repro.core.compression import (  # noqa: F401
 )
 from repro.core.federated import (  # noqa: F401
     FederatedConfig,
+    aggregation_metrics,
     apply_aggregate,
     centralized_step,
     federated_round,

@@ -78,6 +78,19 @@ from repro.core.sampler import (
 AGGREGATOR_SCHEMA_VERSION = 1
 
 
+def _own(tree):
+    """Copy a pytree's arrays so the aggregator exclusively owns them.
+
+    Aggregators DONATE their state to the round/flush jits (in-place updates of
+    the params-sized lanes instead of double-buffering). Donation invalidates
+    the input arrays, so state built from caller-held arrays (the initial
+    ``params``, a restored checkpoint pytree) must be copied once at
+    construction — otherwise the first donated call would delete arrays the
+    caller still references. Every later state is a jit output the aggregator
+    owns outright."""
+    return jax.tree_util.tree_map(jnp.array, tree)
+
+
 # ---------------------------------------------------------------------------
 # (b) the weight policy, shared by both aggregators
 # ---------------------------------------------------------------------------
@@ -179,6 +192,8 @@ class SyncAggregator(Aggregator):
         rng: Optional[jax.Array] = None,
         state: Optional[Dict[str, Any]] = None,
         shard_clients: Optional[Callable] = None,
+        fused_server: bool = False,
+        donate: bool = True,
     ):
         if partial_progress or pcfg.partial_progress:
             # the aggregator owns the policy: it teaches the participation
@@ -189,26 +204,43 @@ class SyncAggregator(Aggregator):
         self.codec = codec
         self.seed = seed
         self.partial_progress = pcfg.partial_progress
+        self.fused_server = fused_server
         if state is None:
             state = init_federated_state(fed, params, rng)
             if codec is not None and codec.stateful:
                 state["uplink_residuals"] = init_uplink_residuals(
                     codec, params, pcfg.population
                 )
-        self.state = state
+        self.donate = donate
+        # take ownership: the round jit donates the state (see _own)
+        self.state = _own(state) if donate else state
+        apply_fn = None
+        if fused_server:
+            # deferred: kernels/fedcore imports core modules for the seam types
+            from repro.kernels.fedcore import fused_apply_aggregate
+
+            apply_fn = fused_apply_aggregate
+        # the aggregator exclusively owns its state pytree (params, outer
+        # lanes, rng, the residual store — and the inner states under
+        # keep_inner_state), and every round replaces it wholesale: donating it
+        # lets XLA update the params-sized lanes in place instead of
+        # double-buffering them (a no-op on backends without donation support)
+        donate_kw = {"donate_argnums": (0,)} if donate else {}
         if self.partial_progress:
             self._round_fn = jax.jit(
                 lambda s, b, w, sel, tau: federated_round_with_uplink(
                     loss_fn, fed, codec, s, b, client_weights=w, selected=sel,
-                    shard_clients=shard_clients, tau_steps=tau,
-                )
+                    shard_clients=shard_clients, tau_steps=tau, apply_fn=apply_fn,
+                ),
+                **donate_kw,
             )
         else:
             self._round_fn = jax.jit(
                 lambda s, b, w, sel: federated_round_with_uplink(
                     loss_fn, fed, codec, s, b, client_weights=w, selected=sel,
-                    shard_clients=shard_clients,
-                )
+                    shard_clients=shard_clients, apply_fn=apply_fn,
+                ),
+                **donate_kw,
             )
 
     # --- (a) admission ---------------------------------------------------
@@ -251,7 +283,10 @@ class SyncAggregator(Aggregator):
 
     # --- (c) checkpoint schema -------------------------------------------
     def checkpoint(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
-        return self.state, dict(
+        # a COPY, not the live state: the round jit donates self.state, so a
+        # caller that serializes the checkpoint after the next round would
+        # otherwise hold deleted arrays
+        return _own(self.state), dict(
             self._manifest_header(), round=int(self.state["round"])
         )
 
@@ -312,12 +347,14 @@ class AsyncBufferAggregator(Aggregator):
         state: Optional[Dict[str, Any]] = None,
         codec: Optional[Codec] = None,
         dispatch: Optional[Dict[str, Any]] = None,
+        fused_server: bool = False,
     ):
         self.fed = fed
         self.acfg = acfg
         self.pcfg = pcfg
         self.codec = codec
         self.seed = seed
+        self.fused_server = fused_server
         if pcfg.partial_progress and pcfg.local_steps != fed.local_steps:
             raise ValueError(
                 "pcfg.local_steps must equal fed.local_steps under partial "
@@ -325,15 +362,32 @@ class AsyncBufferAggregator(Aggregator):
             )
         stateful = codec is not None and codec.stateful
         self._stateful = stateful
+        apply_fn = None
+        if fused_server:
+            from repro.kernels.fedcore import fused_apply_aggregate
+
+            apply_fn = fused_apply_aggregate
         # (a) admission + flush as standalone jits: the flush then compiles in
         # the same fusion context as the sync server phase, keeping the
-        # buffer_size==K / α==0 path bitwise-equal to federated_round
+        # buffer_size==K / α==0 path bitwise-equal to federated_round.
+        # DONATION: the buffer lanes, outer state and rng are exclusively owned
+        # and replaced on every call, so they donate — but ``params`` must NOT:
+        # the in-flight dispatch slots snapshot the params pytree BY REFERENCE,
+        # and donating it would invalidate those snapshots. The state splits
+        # into (params, rest) at each call so only ``rest`` donates.
         self._admit_fn = jax.jit(
-            lambda st, d, r, w: admit_delta(
-                fed, acfg, st, d, r, w, auto_flush=False, codec=codec
-            )
+            lambda p, rest, d, r, w: admit_delta(
+                fed, acfg, dict(rest, params=p), d, r, w, auto_flush=False,
+                codec=codec,
+            ),
+            donate_argnums=(1,),
         )
-        self._flush_fn = jax.jit(lambda st: flush_buffer(fed, acfg, st))
+        self._flush_fn = jax.jit(
+            lambda p, rest: flush_buffer(
+                fed, acfg, dict(rest, params=p), apply_fn=apply_fn
+            ),
+            donate_argnums=(1,),
+        )
         if state is None:
             state = init_async_state(fed, acfg, params, rng)
         else:
@@ -341,7 +395,13 @@ class AsyncBufferAggregator(Aggregator):
         inflight = state.pop("inflight_params", None)
         uplink_rng = state.pop("uplink_rng", None)
         self.residuals = state.pop("uplink_residuals", None)
-        self.state = state
+        if self.residuals is not None:
+            self.residuals = _own(self.residuals)  # _res_scatter donates the store
+        # take ownership of everything the admit/flush jits donate (every lane
+        # but params — params is aliased by in-flight snapshots, never donated)
+        self.state = dict(
+            state, **_own({k: v for k, v in state.items() if k != "params"})
+        )
         if self.residuals is not None and not stateful:
             raise ValueError(
                 "restored state carries per-client error-feedback residuals but "
@@ -355,7 +415,10 @@ class AsyncBufferAggregator(Aggregator):
             )
         if stateful:
             # population-id gather/scatter as two tiny jits (traced cid — one
-            # compile each, reused for every completion)
+            # compile each, reused for every completion). The (P, ...) residual
+            # store is exclusively driver-owned and replaced per scatter:
+            # donating it turns the scatter into an in-place row write instead
+            # of copying the params-sized-×-P store every completion.
             self._res_gather = jax.jit(
                 lambda store, cid: jax.tree_util.tree_map(
                     lambda r: r[cid][None], store
@@ -364,7 +427,8 @@ class AsyncBufferAggregator(Aggregator):
             self._res_scatter = jax.jit(
                 lambda store, cid, new: jax.tree_util.tree_map(
                     lambda r, n: r.at[cid].set(n[0]), store, new
-                )
+                ),
+                donate_argnums=(0,),
             )
             self._res_norm_fn = jax.jit(global_norm)
         self._bytes_per_upload = (
@@ -441,18 +505,28 @@ class AsyncBufferAggregator(Aggregator):
             return float(ev.weight) * ev.local_steps / self.pcfg.local_steps
         return float(ev.weight)
 
+    def _split_state(self):
+        """(params, rest): params is aliased by in-flight snapshots and never
+        donated; everything else is exclusively owned and donates."""
+        return (
+            self.state["params"],
+            {k: v for k, v in self.state.items() if k != "params"},
+        )
+
     def admit(self, delta, version: int, weight: float) -> Dict[str, jax.Array]:
         """Admit one (decoded-at-the-door) upload tagged with the model version
         it was computed against; rejected arrivals consume nothing."""
+        params, rest = self._split_state()
         self.state, m = self._admit_fn(
-            self.state, delta,
+            params, rest, delta,
             jnp.asarray(version, jnp.int32), jnp.asarray(weight, jnp.float32),
         )
         return m
 
     def flush(self) -> Dict[str, jax.Array]:
         """One outer update from the buffered deltas; bumps the version."""
-        self.state, m = self._flush_fn(self.state)
+        params, rest = self._split_state()
+        self.state, m = self._flush_fn(params, rest)
         return m
 
     def should_flush(self) -> bool:
@@ -462,10 +536,13 @@ class AsyncBufferAggregator(Aggregator):
     def checkpoint_state(self) -> Dict[str, Any]:
         """Server state + the per-client error-feedback store as ONE pytree
         with a fixed structure (the legacy PR-3 schema — a strict subset of
-        :meth:`checkpoint`, kept for buffer-only round-trips)."""
+        :meth:`checkpoint`, kept for buffer-only round-trips). Returns a COPY:
+        the admit/flush jits donate the non-params lanes and ``_res_scatter``
+        donates the residual store, so a checkpoint held past the next event
+        must not alias them."""
         if self.residuals is None:
-            return self.state
-        return dict(self.state, uplink_residuals=self.residuals)
+            return _own(self.state)
+        return _own(dict(self.state, uplink_residuals=self.residuals))
 
     def checkpoint(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         """The canonical resumable checkpoint: ``(state_pytree, manifest)``.
@@ -595,10 +672,11 @@ class AsyncFederationDriver(AsyncBufferAggregator):
         state: Optional[Dict[str, Any]] = None,
         codec: Optional[Codec] = None,
         dispatch: Optional[Dict[str, Any]] = None,
+        fused_server: bool = False,
     ):
         super().__init__(
             fed, acfg, pcfg, seed=seed, params=params, rng=rng, state=state,
-            codec=codec, dispatch=dispatch,
+            codec=codec, dispatch=dispatch, fused_server=fused_server,
         )
         self.make_batches = make_batches
         fed1 = replace(fed, clients_per_round=1, keep_inner_state=False)

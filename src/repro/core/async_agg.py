@@ -129,7 +129,10 @@ def staleness_discount(weight, staleness, alpha: float):
 
 
 def flush_buffer(
-    fed: FederatedConfig, acfg: AsyncAggConfig, state: Dict[str, Any]
+    fed: FederatedConfig,
+    acfg: AsyncAggConfig,
+    state: Dict[str, Any],
+    apply_fn: Optional[Any] = None,  # server-phase override (fused Pallas path)
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
     """Apply one outer update from the buffered deltas and reset the buffer.
 
@@ -137,9 +140,11 @@ def flush_buffer(
     client axis and the discounted weights as the elastic weight vector —
     weighted mean → optional DP noise → outer update → version += 1. Empty slots
     carry zero weight, so a partial (forced) flush aggregates only what arrived.
+    ``apply_fn`` swaps in a drop-in server phase (the ``--fused-server``
+    flat-buffer pass over the (M, N) buffer), exactly as in ``federated_round``.
     """
     core = {k: state[k] for k in ("params", "outer", "round", "rng")}
-    new_core, metrics = apply_aggregate(
+    new_core, metrics = (apply_fn or apply_aggregate)(
         fed, core, state["buffer"], client_weights=state["buf_weights"]
     )
     count = state["buf_count"].astype(jnp.float32)
@@ -160,8 +165,10 @@ def flush_buffer(
     return new_state, metrics
 
 
-def _zero_flush_metrics(fed, acfg, state):
-    shapes = jax.eval_shape(lambda s: flush_buffer(fed, acfg, s)[1], state)
+def _zero_flush_metrics(fed, acfg, state, apply_fn=None):
+    shapes = jax.eval_shape(
+        lambda s: flush_buffer(fed, acfg, s, apply_fn=apply_fn)[1], state
+    )
     return jax.tree_util.tree_map(lambda sh: jnp.zeros(sh.shape, sh.dtype), shapes)
 
 
@@ -174,6 +181,7 @@ def admit_delta(
     weight: jax.Array,  # () float32 — pre-discount aggregation weight (n_k or 1)
     auto_flush: bool = True,  # static: flush in-graph (lax.cond) when the buffer fills
     codec: Optional[Codec] = None,  # uplink codec; decodes the payload at admission
+    apply_fn: Optional[Any] = None,  # server-phase override for the in-graph flush
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
     """Admit one client pseudo-gradient into the buffer; flush when it fills.
 
@@ -245,10 +253,10 @@ def admit_delta(
         "discounted_weight": jnp.where(accept, disc, 0.0),
     }
     if auto_flush:
-        zero_metrics = _zero_flush_metrics(fed, acfg, state)
+        zero_metrics = _zero_flush_metrics(fed, acfg, state, apply_fn=apply_fn)
         state, flush_metrics = jax.lax.cond(
             state["buf_count"] >= acfg.buffer_size,
-            lambda st: flush_buffer(fed, acfg, st),
+            lambda st: flush_buffer(fed, acfg, st, apply_fn=apply_fn),
             lambda st: (st, zero_metrics),
             state,
         )
@@ -266,6 +274,7 @@ def admit_deltas(
     client_rounds: jax.Array,  # (N,) int32 round tags
     weights: jax.Array,  # (N,) float32 pre-discount weights
     codec: Optional[Codec] = None,  # uplink codec; each arrival decoded at admission
+    apply_fn: Optional[Any] = None,  # server-phase override for in-graph flushes
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
     """Admit a batch of arrivals in order — the ``(state, deltas, tags, weights)
     → state`` form of the aggregator. A ``lax.scan`` over the arrival axis, so
@@ -276,7 +285,7 @@ def admit_deltas(
 
     def body(st, x):
         d, r, w = x
-        return admit_delta(fed, acfg, st, d, r, w, codec=codec)
+        return admit_delta(fed, acfg, st, d, r, w, codec=codec, apply_fn=apply_fn)
 
     return jax.lax.scan(
         body,

@@ -146,13 +146,28 @@ def _canon_scheme(scheme: str) -> str:
     return SCHEME_ALIASES.get(scheme, scheme)
 
 
+def _topk_index_nbytes(n_total: int) -> float:
+    """Bytes per sparse index on the wire. Indices address the ONE flat packed
+    buffer (the ``kernels/fedcore`` layout — every leaf concatenated into a
+    single 1D view), so their dtype is sized to the flat length, not per leaf:
+    uint16 up to 64K parameters, uint32 up to 4G, uint64 beyond."""
+    if n_total <= 1 << 16:
+        return 2.0
+    if n_total <= 1 << 32:
+        return 4.0
+    return 8.0
+
+
 def uplink_bytes(tree, scheme: str = "float32", k_fraction: float = 0.01) -> float:
     """Bytes a client transmits per upload under each scheme (for the comm tables).
 
-    Exact per-leaf accounting, matched against real encoded payloads in the tests:
-    int8 pays one float32 scale per tensor; top-k pays (value + index) per kept
-    entry with the same per-tensor ``k = max(1, int(size * k_fraction))`` that
-    ``topk_compress`` keeps.
+    Exact accounting, matched against real encoded payloads in the tests: int8
+    pays one float32 scale per tensor; top-k pays (float32 value + flat-buffer
+    index) per kept entry — the index dtype is sized to the TOTAL flat length
+    (``_topk_index_nbytes``), with the same per-tensor
+    ``k = max(1, int(size * k_fraction))`` kept-entry count that
+    ``topk_compress`` keeps (the flat ``FusedTopKCodec`` overrides ``nbytes``
+    with its global-budget k).
     """
     scheme = _canon_scheme(scheme)
     leaves = jax.tree_util.tree_leaves(tree)
@@ -164,7 +179,8 @@ def uplink_bytes(tree, scheme: str = "float32", k_fraction: float = 0.01) -> flo
     if scheme == "int8":
         return 1.0 * n + 4.0 * len(leaves)
     if scheme == "topk":
-        return float(sum(max(1, int(x.size * k_fraction)) * (4 + 4) for x in leaves))
+        kept = sum(max(1, int(x.size * k_fraction)) for x in leaves)
+        return float(kept) * (4.0 + _topk_index_nbytes(n))
     raise ValueError(scheme)
 
 
@@ -261,6 +277,8 @@ class TopKCodec(Codec):
 
     name = "topk"
     stateful = True
+    # sparse indices address the flat packed buffer; dtype sized to its length
+    _index_nbytes = staticmethod(_topk_index_nbytes)
 
     def __post_init__(self):
         if not 0.0 < self.k_fraction <= 1.0:
@@ -281,22 +299,41 @@ class TopKCodec(Codec):
     def payload_nbytes(self, payload) -> float:
         import numpy as np
 
+        leaves = jax.tree_util.tree_leaves(payload)
+        idx = self._index_nbytes(sum(x.size for x in leaves))
         return float(
-            sum(
-                int((np.asarray(x) != 0).sum()) * (4 + 4)  # value + index per entry
-                for x in jax.tree_util.tree_leaves(payload)
-            )
-        )
+            sum(int((np.asarray(x) != 0).sum()) for x in leaves)  # kept entries
+        ) * (4.0 + idx)  # float32 value + flat-buffer index per entry
 
 
 UPLINK_SCHEMES = ("float32", "bf16", "int8", "topk")
 
 
-def get_codec(scheme: str, topk_fraction: float = 0.05) -> Codec:
-    """Factory keyed by the ``--uplink`` CLI spelling (aliases accepted)."""
+def get_codec(scheme: str, topk_fraction: float = 0.05, fused: bool = False) -> Codec:
+    """Factory keyed by the ``--uplink`` CLI spelling (aliases accepted).
+
+    ``fused=True`` (the ``--fused-server`` path) returns the flat-buffer Pallas
+    codecs from ``kernels/fedcore`` — drop-in :class:`Codec` subclasses, so
+    every call site (``run_clients`` / ``apply_aggregate`` / ``admit_deltas``)
+    is untouched. The identity codec has no fused variant: it stays the exact
+    no-op that anchors every bitwise-equivalence test."""
     canon = _canon_scheme(scheme)
     if canon == "float32":
         return IdentityCodec()
+    if fused:
+        # deferred: kernels/fedcore imports this module for the base classes
+        from repro.kernels.fedcore import (
+            FusedBf16Codec,
+            FusedInt8Codec,
+            FusedTopKCodec,
+        )
+
+        if canon == "bfloat16":
+            return FusedBf16Codec()
+        if canon == "int8":
+            return FusedInt8Codec()
+        if canon == "topk":
+            return FusedTopKCodec(k_fraction=topk_fraction)
     if canon == "bfloat16":
         return Bf16Codec()
     if canon == "int8":

@@ -391,6 +391,64 @@ def run_clients(
     return deltas, aux
 
 
+def aggregation_metrics(
+    delta_norms: jax.Array,  # (C,) per-client delta norms
+    pg_norm: jax.Array,  # () norm of the aggregated (post-noise) pseudo-gradient
+    client_weights: Optional[jax.Array],  # (C,) or None (flat mean)
+) -> Dict[str, jax.Array]:
+    """The scalar aggregation monitors (paper Figs 7, 8), shared by the jnp
+    reference server phase and the fused flat-buffer phase
+    (``kernels/fedcore.fused_apply_aggregate``) — ONE formula set, fed either
+    from per-leaf norm passes (ref) or from in-kernel accumulators (fused), so
+    the two paths can never drift apart on a metrics fix.
+
+    Weighted consensus: Σw_k d_k = W·pg, so the cross terms are
+    ||pg||²W² − Σ(w_k||d_k||)², normalized over the off-diagonal weight mass.
+    The off-diagonal mass vanishes at K_eff=1 — the 0/ε there would amplify fp
+    rounding into garbage, and a lone client trivially agrees with itself.
+    """
+    c = delta_norms.shape[0]
+    elastic = client_weights is not None
+    if elastic:
+        w = client_weights.astype(jnp.float32)
+        part = (w > 0).astype(jnp.float32)
+        eff_k = jnp.maximum(jnp.sum(part), 1.0)
+        metric_w = part / eff_k
+        w_sum = jnp.sum(w)
+        w_sq_sum = jnp.sum(jnp.square(w))
+        sum_sq = jnp.sum(jnp.square(w * delta_norms))
+        norm_of_sum_sq = jnp.square(pg_norm) * jnp.square(w_sum)
+        off_diag = jnp.square(w_sum) - w_sq_sum
+        pairwise_dot = jnp.where(
+            eff_k > 1.5,
+            (norm_of_sum_sq - sum_sq) / jnp.maximum(off_diag, 1e-12),
+            sum_sq / jnp.maximum(w_sq_sum, 1e-12),
+        )
+        mean_sq_norm = sum_sq / jnp.maximum(w_sq_sum, 1e-12)
+        w_norm = w / jnp.maximum(w_sum, 1e-12)
+        weight_entropy = -jnp.sum(
+            jnp.where(w_norm > 0, w_norm * jnp.log(jnp.maximum(w_norm, 1e-30)), 0.0)
+        )
+        effective_clients = jnp.sum(part)
+        delta_norm_mean = jnp.sum(delta_norms * metric_w)
+    else:
+        sum_sq = jnp.sum(jnp.square(delta_norms))
+        norm_of_sum_sq = jnp.square(pg_norm) * c * c
+        pairwise_dot = (norm_of_sum_sq - sum_sq) / jnp.maximum(1, c * (c - 1))
+        mean_sq_norm = sum_sq / c
+        weight_entropy = jnp.log(jnp.asarray(c, jnp.float32))
+        effective_clients = jnp.asarray(c, jnp.float32)
+        delta_norm_mean = jnp.mean(delta_norms)
+    consensus = pairwise_dot / (mean_sq_norm + 1e-12)  # ~cosine alignment
+    return {
+        "pseudo_grad_norm": pg_norm,
+        "client_delta_norm_mean": delta_norm_mean,
+        "client_consensus": consensus,
+        "effective_clients": effective_clients,
+        "weight_entropy": weight_entropy,
+    }
+
+
 def apply_aggregate(
     fed: FederatedConfig,
     state: Dict[str, Any],  # needs 'params', 'outer', 'round', 'rng'
@@ -419,9 +477,6 @@ def apply_aggregate(
     elastic = client_weights is not None
     if elastic:
         w = client_weights.astype(jnp.float32)
-        part = (w > 0).astype(jnp.float32)
-        eff_k = jnp.maximum(jnp.sum(part), 1.0)
-        metric_w = part / eff_k
     global_params = state["params"]
 
     # THE once-per-round collective on the mesh (weighted when elastic)
@@ -455,48 +510,12 @@ def apply_aggregate(
         fed.outer, global_params, pseudo_grad, state["outer"]
     )
 
-    # ---- aggregation metrics (paper Figs 7, 8) ----
+    # ---- aggregation metrics (paper Figs 7, 8) — shared formula set ----
     delta_norms = jax.vmap(global_norm)(deltas)
-    if elastic:
-        # weighted consensus: Σw_k d_k = W·pg, so the cross terms are
-        # ||pg||²W² − Σ(w_k||d_k||)², normalized over the off-diagonal weight mass.
-        w_sum = jnp.sum(w)
-        w_sq_sum = jnp.sum(jnp.square(w))
-        sum_sq = jnp.sum(jnp.square(w * delta_norms))
-        norm_of_sum_sq = jnp.square(global_norm(pseudo_grad)) * jnp.square(w_sum)
-        # off-diagonal weight mass vanishes at K_eff=1 — the 0/ε there would amplify
-        # fp rounding into garbage, and a lone client trivially agrees with itself
-        off_diag = jnp.square(w_sum) - w_sq_sum
-        pairwise_dot = jnp.where(
-            eff_k > 1.5,
-            (norm_of_sum_sq - sum_sq) / jnp.maximum(off_diag, 1e-12),
-            sum_sq / jnp.maximum(w_sq_sum, 1e-12),
-        )
-        mean_sq_norm = sum_sq / jnp.maximum(w_sq_sum, 1e-12)
-        w_norm = w / jnp.maximum(w_sum, 1e-12)
-        weight_entropy = -jnp.sum(
-            jnp.where(w_norm > 0, w_norm * jnp.log(jnp.maximum(w_norm, 1e-30)), 0.0)
-        )
-        effective_clients = jnp.sum(part)
-        delta_norm_mean = jnp.sum(delta_norms * metric_w)
-    else:
-        sum_sq = jnp.sum(jnp.square(delta_norms))
-        norm_of_sum_sq = jnp.square(global_norm(pseudo_grad)) * C * C
-        pairwise_dot = (norm_of_sum_sq - sum_sq) / jnp.maximum(1, C * (C - 1))
-        mean_sq_norm = sum_sq / C
-        weight_entropy = jnp.log(jnp.asarray(C, jnp.float32))
-        effective_clients = jnp.asarray(C, jnp.float32)
-        delta_norm_mean = jnp.mean(delta_norms)
-    consensus = pairwise_dot / (mean_sq_norm + 1e-12)  # ~cosine alignment of deltas
-
-    metrics = {
-        "pseudo_grad_norm": global_norm(pseudo_grad),
-        "client_delta_norm_mean": delta_norm_mean,
-        "global_model_norm": global_norm(new_global),
-        "client_consensus": consensus,
-        "effective_clients": effective_clients,
-        "weight_entropy": weight_entropy,
-    }
+    metrics = dict(
+        aggregation_metrics(delta_norms, global_norm(pseudo_grad), client_weights),
+        global_model_norm=global_norm(new_global),
+    )
 
     new_state = {
         "params": new_global,
@@ -517,10 +536,17 @@ def federated_round(
     codec: Optional[Codec] = None,  # uplink codec (encode client-side, decode server-side)
     residuals: Optional[Any] = None,  # (C, ...) cohort error-feedback residuals
     tau_steps: Optional[jax.Array] = None,  # (C,) int32 realized per-client steps τ_i
+    apply_fn: Optional[Callable] = None,  # server-phase override (fused Pallas path)
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
     """One full federated round — :func:`run_clients` composed with
     :func:`apply_aggregate`. Pure function of (state, batches, weights, residuals,
     tau_steps) — jit it.
+
+    ``apply_fn`` swaps the server phase for a drop-in replacement with
+    ``apply_aggregate``'s exact signature and state/metrics contract — the
+    ``--fused-server`` flag plugs ``kernels/fedcore.fused_apply_aggregate``
+    (the flat-buffer Pallas pass) in here. ``None`` keeps this jnp reference
+    phase, bitwise-unchanged.
 
     ``tau_steps`` enables straggler partial progress (see :func:`run_clients`);
     the caller's weight policy (``core/aggregator``) is expected to scale the
@@ -547,7 +573,7 @@ def federated_round(
         client_weights=client_weights, shard_clients=shard_clients,
         codec=codec, residuals=residuals, tau_steps=tau_steps,
     )
-    new_state, agg_metrics = apply_aggregate(
+    new_state, agg_metrics = (apply_fn or apply_aggregate)(
         fed, state, deltas, client_weights=client_weights, codec=codec
     )
 
@@ -599,6 +625,7 @@ def federated_round_with_uplink(
     selected: Optional[jax.Array] = None,  # (C,) population ids bound to the client axis
     shard_clients: Optional[Callable] = None,
     tau_steps: Optional[jax.Array] = None,  # (C,) int32 realized per-client steps τ_i
+    apply_fn: Optional[Callable] = None,  # server-phase override (fused Pallas path)
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
     """:func:`federated_round` wired to the population-keyed residual store.
 
@@ -617,6 +644,7 @@ def federated_round_with_uplink(
         return federated_round(
             loss_fn, fed, state, batches, client_weights=client_weights,
             shard_clients=shard_clients, codec=codec, tau_steps=tau_steps,
+            apply_fn=apply_fn,
         )
     if selected is None:
         raise ValueError("stateful uplink codec requires the cohort's population ids")
@@ -627,7 +655,7 @@ def federated_round_with_uplink(
     new_core, metrics = federated_round(
         loss_fn, fed, core, batches, client_weights=client_weights,
         shard_clients=shard_clients, codec=codec, residuals=cohort_res,
-        tau_steps=tau_steps,
+        tau_steps=tau_steps, apply_fn=apply_fn,
     )
     new_cohort_res = new_core.pop("uplink_residuals")
     new_core["uplink_residuals"] = jax.tree_util.tree_map(

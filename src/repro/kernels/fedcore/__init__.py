@@ -1,0 +1,17 @@
+"""Fused federation kernels: flat-buffer server apply + uplink codec kernels."""
+from repro.kernels.fedcore.ops import (  # noqa: F401
+    BLOCK,
+    FlatSpec,
+    FusedBf16Codec,
+    FusedInt8Codec,
+    FusedTopKCodec,
+    dtype_group_indices,
+    fused_apply_aggregate,
+    pack_client_leaves,
+    pack_flat,
+    pack_leaves,
+    server_apply_bytes,
+    topk_encode_bytes,
+    unpack_flat,
+    unpack_leaves,
+)

@@ -1,0 +1,18 @@
+"""Pure-jnp references for the fedcore kernel suite.
+
+Unlike the model kernels (whose refs are standalone oracles), the federation
+path's reference IS the production default: the per-leaf jnp chain in
+``core/federated.apply_aggregate`` and the ``core/compression`` primitives.
+This module re-exports them under the kernel-layer naming so tests and
+benchmarks compare ``fedcore.ops`` against exactly the code the non-fused
+round runs — the fused path can never drift from a stale copy of the ref.
+"""
+from __future__ import annotations
+
+from repro.core.compression import (  # noqa: F401
+    cast_compress as sr_bf16_ref,
+    int8_compress as int8_quant_ref,
+    int8_decompress as int8_dequant_ref,
+    topk_compress as topk_ef_ref,
+)
+from repro.core.federated import apply_aggregate as server_apply_ref  # noqa: F401

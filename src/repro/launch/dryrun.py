@@ -42,6 +42,12 @@ def main() -> None:
                     help="thread the (C,) straggler partial-progress τ-mask "
                          "through the federated round (replicated int32 input "
                          "consumed inside the scan — shardings unperturbed)")
+    ap.add_argument("--fused-server", action="store_true",
+                    help="request the fused flat-buffer server phase "
+                         "(kernels/fedcore). On multi-device meshes the GSPMD "
+                         "lowering keeps the reference phase (the fused kernel "
+                         "is the aggregator-host path), so this asserts the "
+                         "flag cannot perturb shardings or footprint")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="", help="suffix for result filenames (perf iters)")
     args = ap.parse_args()
@@ -97,6 +103,7 @@ def main() -> None:
                                 uplink=args.uplink,
                                 topk_fraction=args.topk_fraction,
                                 partial_progress=args.partial_progress,
+                                fused_server=args.fused_server,
                             )
                         with mesh:
                             step = build_step(cfg, shape_name, mesh, **kw)

@@ -254,6 +254,7 @@ def build_train_step(
     uplink: str = "float32",
     topk_fraction: float = 0.05,
     partial_progress: bool = False,
+    fused_server: bool = False,
 ) -> BuiltStep:
     model = build_model(cfg)
     loss_fn = lambda p, b: model.loss(p, b, remat=remat)
@@ -284,13 +285,29 @@ def build_train_step(
                 ),
             )
 
-        codec = get_codec(uplink, topk_fraction) if uplink != "float32" else None
+        # the fused flat-buffer server phase (kernels/fedcore) is the
+        # aggregator-host path: it consumes the whole (C, N) delta buffer in one
+        # kernel, which cannot span a GSPMD-sharded client axis. On multi-device
+        # meshes the flag therefore keeps the reference server phase — by
+        # construction the lowering, shardings and memory footprint are
+        # identical with or without --fused-server (the dry-run smoke asserts
+        # it); only single-device lowerings swap the fused pass in.
+        fused_active = fused_server and mesh.size == 1
+        codec = (
+            get_codec(uplink, topk_fraction, fused=fused_active)
+            if uplink != "float32" else None
+        )
         stateful = codec is not None and codec.stateful
         if (stateful or partial_progress) and not elastic:
             raise ValueError(
                 "stateful uplink codecs and partial progress require the "
                 "elastic round"
             )
+        apply_fn = None
+        if fused_active:
+            from repro.kernels.fedcore import fused_apply_aggregate
+
+            apply_fn = fused_apply_aggregate
         batches = input_specs(cfg, shape, mesh, tau_lowered=tau_lowered, mode="federated")
         # elastic participation on the mesh: the (C,) weight vector enters the
         # jitted round as a replicated traced input — dropouts / stragglers /
@@ -322,10 +339,17 @@ def build_train_step(
         def _round(s, b, *rest):
             kw = dict(zip(arg_names, rest))
             return federated_round(
-                loss_fn, fed, s, b, shard_clients=shard_clients, codec=codec, **kw
+                loss_fn, fed, s, b, shard_clients=shard_clients, codec=codec,
+                apply_fn=apply_fn, **kw,
             )
 
-        step = jax.jit(_round)
+        # donate the server state (params + outer lanes + rng) and, when
+        # present, the cohort residual rows: both are replaced wholesale every
+        # round, so the round stops double-buffering its params-sized arrays
+        donate = (0,)
+        if "residuals" in arg_names:
+            donate = donate + (2 + arg_names.index("residuals"),)
+        step = jax.jit(_round, donate_argnums=donate)
         tokens_per_round = tau_lowered * shape.global_batch * shape.seq_len
         mf = 6.0 * cfg.active_param_count() * tokens_per_round
         return BuiltStep(
@@ -343,6 +367,8 @@ def build_train_step(
                 "elastic": elastic,
                 "uplink": uplink,
                 "partial_progress": partial_progress,
+                "fused_server": fused_active,
+                "fused_server_requested": fused_server,
             },
         )
 

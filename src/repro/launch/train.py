@@ -135,6 +135,15 @@ def parse_args(argv=None):
     ap.add_argument("--topk-fraction", type=float, default=0.05,
                     help="--uplink topk: fraction of entries kept per tensor")
     ap.add_argument(
+        "--fused-server", action="store_true",
+        help="fused Pallas federation path (kernels/fedcore): the server "
+             "weighted-mean + DP noise + outer update run as ONE pass over the "
+             "flat (C, N) delta buffer, and --uplink codecs use the fused "
+             "flat-buffer kernels. Compiled on TPU; on CPU hosts the identical "
+             "math runs as a flat XLA chain. Off (default) keeps the per-leaf "
+             "jnp reference path, bitwise-unchanged",
+    )
+    ap.add_argument(
         "--participation", default="uniform", choices=["uniform", "dirichlet", "markov"],
         help="client-availability model: uniform sampling, Dirichlet popularity "
              "skew, or per-client Markov on/off churn",
@@ -236,7 +245,7 @@ def run(args, cfg=None) -> dict:
             "the codec already defines the wire format"
         )
     codec = (
-        get_codec(args.uplink, args.topk_fraction)
+        get_codec(args.uplink, args.topk_fraction, fused=args.fused_server)
         if args.uplink != "float32" else None
     )
 
@@ -260,7 +269,7 @@ def run(args, cfg=None) -> dict:
     # (dropouts, stragglers, K_eff < K, realized τ_i) never trigger a recompile.
     agg = SyncAggregator(
         loss_fn, fed, pcfg, codec=codec, seed=args.seed,
-        partial_progress=args.partial_progress,
+        partial_progress=args.partial_progress, fused_server=args.fused_server,
         params=params, rng=jax.random.PRNGKey(args.seed + 1),
     )
 
@@ -341,7 +350,8 @@ def run(args, cfg=None) -> dict:
             **participation_metrics(plan),
             **partial_progress_metrics(plan, args.local_steps),
             **uplink_round_metrics(
-                args.uplink, params, plan.effective_k, args.topk_fraction
+                args.uplink, params, plan.effective_k, args.topk_fraction,
+                codec=codec,
             ),
         )
         val_ppl = evaluate_perplexity(
@@ -388,7 +398,7 @@ _ASYNC_RESUME_ARGS = (
     "seed", "clients", "population", "local_steps", "batch", "buffer_size",
     "staleness_alpha", "max_staleness", "participation", "dirichlet_alpha",
     "dropout_rate", "straggler_profile", "deadline", "client_weighting",
-    "uplink", "topk_fraction", "partial_progress",
+    "uplink", "topk_fraction", "partial_progress", "fused_server",
     "arch", "reduced", "seq_len", "heterogeneous",
     "inner_lr", "outer", "outer_lr", "fedprox_mu",
     "dp_clip", "dp_noise", "pseudo_grad_dtype",
@@ -451,7 +461,13 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
                 )
             ck_args = extra.get("args", {})
             for key in _ASYNC_RESUME_ARGS:
-                ours, theirs = getattr(args, key), ck_args.get(key)
+                ours = getattr(args, key)
+                if key not in ck_args and not ours:
+                    # the flag postdates this checkpoint (e.g. --fused-server on
+                    # a PR-4 checkpoint): the old run used today's default
+                    # semantics, so only a non-default value conflicts
+                    continue
+                theirs = ck_args.get(key)
                 if theirs is not None or ours is not None:
                     if ours != theirs:
                         raise SystemExit(
@@ -480,6 +496,7 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
         loss_fn, fed, acfg, pcfg, make_batches,
         seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
         codec=codec, state=state, dispatch=dispatch,
+        fused_server=args.fused_server,
     )
 
     # reference: what the deadline-masking sync schedule pays to aggregate the
@@ -510,7 +527,8 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
         deltas_admitted[0] += int(row.get("buffer_fill", 0))
         row.update(
             uplink_round_metrics(
-                args.uplink, params, row.get("buffer_fill", 0.0), args.topk_fraction
+                args.uplink, params, row.get("buffer_fill", 0.0),
+                args.topk_fraction, codec=codec,
             )
         )
         row.update(

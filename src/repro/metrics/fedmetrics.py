@@ -143,15 +143,24 @@ def wallclock_speedup(sync_time: float, async_time: float) -> float:
 
 
 def uplink_round_metrics(
-    scheme: str, params_like, n_uploads: float, topk_fraction: float = 0.05
+    scheme: str, params_like, n_uploads: float, topk_fraction: float = 0.05,
+    codec=None,
 ) -> Dict[str, float]:
     """Per-round uplink cost row: bytes one client sends under ``scheme``, bytes
     the whole round's ``n_uploads`` uploads cost, and the compression ratio vs
-    the uncompressed float32 uplink. Uses the analytic per-leaf accounting from
-    ``uplink_bytes``, which the tier-1 tests pin to real encoded payload sizes."""
+    the uncompressed float32 uplink. Uses the analytic accounting from
+    ``uplink_bytes``, which the tier-1 tests pin to real encoded payload sizes.
+
+    Pass the run's live ``codec`` when one exists: a codec may override its
+    wire accounting (the fused flat top-k prices ONE global kept-entry budget,
+    not per-leaf budgets), and the logged bytes must match what that codec
+    actually ships — not what the scheme name alone would suggest."""
     from repro.core.compression import uplink_bytes
 
-    per_client = uplink_bytes(params_like, scheme, topk_fraction)
+    per_client = (
+        float(codec.nbytes(params_like)) if codec is not None
+        else uplink_bytes(params_like, scheme, topk_fraction)
+    )
     f32 = uplink_bytes(params_like, "float32")
     return {
         "uplink_bytes_per_client": float(per_client),

@@ -205,6 +205,26 @@ def test_compressed_uplink_lowers_without_sharding_perturbation():
 
 
 @pytest.mark.slow
+def test_fused_server_flag_is_sharding_neutral_on_mesh():
+    """--fused-server dry-run smoke (ISSUE 5): the fused flat-buffer server
+    phase is the aggregator-host path — its kernel consumes the whole (C, N)
+    delta buffer and cannot span a GSPMD-sharded client axis, so on multi-device
+    meshes `build_train_step` keeps the reference server phase. This test pins
+    that contract: requesting --fused-server on the mesh must leave the
+    bottleneck, FLOPs, collective traffic and memory footprint EXACTLY as the
+    baseline lowering (identical HLO, not merely close)."""
+    base = _run_dryrun("qwen3-1.7b", "train_4k", "(4, 4)", "('data', 'model')",
+                       kw={"mode": "federated", "elastic": True})
+    fused = _run_dryrun("qwen3-1.7b", "train_4k", "(4, 4)", "('data', 'model')",
+                        kw={"mode": "federated", "elastic": True,
+                            "fused_server": True})
+    assert fused["bottleneck"] == base["bottleneck"]
+    assert fused["flops"] == base["flops"]
+    assert fused["coll"] == base["coll"]
+    assert fused["mem"] == base["mem"]
+
+
+@pytest.mark.slow
 def test_federated_vs_centralized_collective_reduction():
     """Paper claim C7: per-token collective traffic of a federated round is far below
     the per-step DDP baseline at equal tokens (here with τ_lowered=4; at τ=500 the

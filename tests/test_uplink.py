@@ -170,6 +170,24 @@ def test_uplink_bytes_matches_actual_encoded_leaf_sizes(scheme):
     assert codec.nbytes(tree) == uplink_bytes(tree, scheme, 0.1)
 
 
+def test_topk_index_bytes_sized_to_flat_length():
+    """Sparse indices address the ONE flat packed buffer (the fedcore layout),
+    so their wire dtype is sized to the TOTAL flat length — uint16 up to 64K
+    params, uint32 beyond — never 4 bytes per leaf-local index. Pinned both
+    analytically and against measured payload sizes."""
+    # _tree: 64 + 128 + 5 = 197 elements <= 2^16 -> 2-byte indices;
+    # per-leaf kept at k=0.1: 6 + 12 + 1 = 19 entries of (4 + 2) bytes
+    small = _tree(seed=3)
+    assert uplink_bytes(small, "topk", 0.1) == 19 * (4 + 2)
+
+    # 70_000 > 2^16 -> 4-byte indices, 7_000 kept entries of (4 + 4) bytes
+    big = {"w": jnp.asarray(np.random.default_rng(0).standard_normal(70_000), jnp.float32)}
+    assert uplink_bytes(big, "topk", 0.1) == 7_000 * (4 + 4)
+    codec = TopKCodec(k_fraction=0.1)
+    payload, _ = codec.encode(big, codec.init_residual(big))
+    assert codec.payload_nbytes(payload) == uplink_bytes(big, "topk", 0.1)
+
+
 def test_vmapped_int8_scales_are_per_client():
     """Cohort encode must quantize each client against ITS OWN absmax — a shared
     scale would let one hot client wash out everyone else's resolution."""
