@@ -5,6 +5,16 @@ Server state (global params + outer optimizer + round bookkeeping) and per-clien
 manifest, replacing the paper's MinIO/S3 object store with the local filesystem while
 keeping the same resume semantics: `latest_round()` + `load_server()` give automatic
 federated training resumption from the most recent round (§6.2).
+
+Atomicity guarantee: every blob (``server.npz``, ``manifest.json``, client JSON)
+is written to a same-directory temp file, fsynced, then ``os.replace``d into
+place, and the manifest is written strictly AFTER the state blob. A crash at any
+instant therefore leaves each round directory in one of two states: *complete*
+(parseable manifest + state blob, the manifest rename was the commit point) or
+*partial* (no readable manifest). ``latest_round()`` only ever selects complete
+rounds, and ``_gc`` retains the last ``keep_last`` COMPLETE rounds before
+pruning partial debris — so resume after ``kill -9`` mid-save always lands on
+the newest round that finished committing.
 """
 from __future__ import annotations
 
@@ -25,10 +35,28 @@ def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _atomic_write(path: str, writer) -> None:
+    """Write via same-directory temp file + fsync + ``os.replace`` so the final
+    path either holds the complete new content or is untouched — never a
+    truncated half-write (the crash mode the resume tests kill-inject)."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        writer(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _atomic_write_json(path: str, obj, **dump_kw) -> None:
+    _atomic_write(path, lambda f: f.write(json.dumps(obj, **dump_kw).encode("utf-8")))
+
+
 def save_pytree(path: str, tree) -> None:
     flat = _flatten_with_paths(tree)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **flat)
+    if not path.endswith(".npz"):
+        path = path + ".npz"  # mirror np.savez's implicit suffix for the rename
+    _atomic_write(path, lambda f: np.savez(f, **flat))
 
 
 def load_pytree(path: str, like) -> Any:
@@ -58,14 +86,43 @@ class CheckpointManager:
     def _round_dir(self, rnd: int) -> str:
         return os.path.join(self.dir, f"round_{rnd:06d}")
 
+    def _is_complete(self, rnd: int) -> bool:
+        """A round is complete iff its state blob exists AND its manifest parses.
+
+        ``os.replace`` makes a truncated manifest impossible on POSIX, but the
+        check also guards pre-fix checkpoints and exotic filesystems — resume
+        must never select a round it cannot actually load.
+        """
+        d = self._round_dir(rnd)
+        if not os.path.exists(os.path.join(d, "server.npz")):
+            return False
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return False
+        return True
+
+    def _round_numbers(self):
+        out = []
+        for n in os.listdir(self.dir):
+            if not n.startswith("round_"):
+                continue
+            try:
+                out.append(int(n.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
     # --- server ---------------------------------------------------------
     def save_server(self, rnd: int, state, extra: Optional[Dict] = None) -> str:
         d = self._round_dir(rnd)
         os.makedirs(d, exist_ok=True)
+        # state blob first, manifest last: the manifest rename is the commit
+        # point that flips the round from partial to complete (module docstring)
         save_pytree(os.path.join(d, "server.npz"), state)
         manifest = {"round": rnd, "extra": extra or {}}
-        with open(os.path.join(d, "manifest.json"), "w") as f:
-            json.dump(manifest, f, indent=2)
+        _atomic_write_json(os.path.join(d, "manifest.json"), manifest, indent=2)
         self._gc()
         return d
 
@@ -73,16 +130,12 @@ class CheckpointManager:
         """Client-private state: data cursor etc. (kept outside server control, §4.1)."""
         d = self._round_dir(rnd)
         os.makedirs(d, exist_ok=True)
-        with open(os.path.join(d, f"client_{client_id:04d}.json"), "w") as f:
-            json.dump(data_state, f)
+        _atomic_write_json(os.path.join(d, f"client_{client_id:04d}.json"), data_state)
 
     def latest_round(self) -> Optional[int]:
-        rounds = [
-            int(n.split("_")[1])
-            for n in os.listdir(self.dir)
-            if n.startswith("round_")
-            and os.path.exists(os.path.join(self.dir, n, "manifest.json"))
-        ]
+        """Newest COMPLETE round — partial (crash-interrupted) rounds are
+        skipped, so resume always gets a loadable checkpoint."""
+        rounds = [r for r in self._round_numbers() if self._is_complete(r)]
         return max(rounds) if rounds else None
 
     def load_manifest(self, rnd: int) -> Dict:
@@ -111,10 +164,24 @@ class CheckpointManager:
             return json.load(f)
 
     def _gc(self) -> None:
-        rounds = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.dir) if n.startswith("round_")
+        """Retain the last ``keep_last`` COMPLETE rounds, then prune debris.
+
+        Partial rounds never count toward the retention quota (a crash loop
+        that kept leaving half-written dirs used to rotate every complete
+        checkpoint out of existence). Partial dirs are removed only when they
+        are older than the newest complete round — a partial dir NEWER than
+        every complete round may be a save in flight, so it is left alone.
+        """
+        rounds = self._round_numbers()
+        complete = [r for r in rounds if self._is_complete(r)]
+        if not complete:
+            return  # nothing loadable yet: deleting anything can only lose data
+        doomed = set(complete[: -self.keep_last])
+        newest_complete = complete[-1]
+        doomed.update(
+            r for r in rounds if r not in complete and r < newest_complete
         )
-        for rnd in rounds[: -self.keep_last]:
+        for rnd in doomed:
             d = self._round_dir(rnd)
             for fn in os.listdir(d):
                 os.remove(os.path.join(d, fn))

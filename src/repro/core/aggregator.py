@@ -489,6 +489,14 @@ class AsyncBufferAggregator(Aggregator):
         heapq.heappush(
             self._heap, (self.sim_time + ev.duration, ev.index, ev, snapshot, version)
         )
+        self._on_dispatch(ev, snapshot, version)
+
+    def _on_dispatch(self, ev, snapshot, version: int) -> None:
+        """Hook fired once per dispatched slot — including replayed slots on
+        restore. The cross-process runtime overrides this to hand the slot's
+        fully self-describing work assignment (params snapshot, version tag,
+        residual row, per-dispatch rng) to a client backend; the in-process
+        simulator needs nothing."""
 
     def _pop_completion(self):
         finish, _, ev, snapshot, version = heapq.heappop(self._heap)
@@ -531,6 +539,28 @@ class AsyncBufferAggregator(Aggregator):
 
     def should_flush(self) -> bool:
         return int(self.state["buf_count"]) >= self.acfg.buffer_size
+
+    def _flush_row(self, flush_metrics) -> Dict[str, float]:
+        row = {k: float(v) for k, v in flush_metrics.items()}
+        row["sim_time"] = self.sim_time
+        row["train_loss_mean"] = (
+            float(jnp.mean(jnp.asarray(self._losses))) if self._losses else 0.0
+        )
+        row["admitted_staleness"] = list(self._staleness)
+        row["uplink_bytes_total"] = self.uplink_bytes_total
+        if self.residuals is not None:
+            row["uplink_residual_norm"] = (
+                sum(self._res_norms) / len(self._res_norms) if self._res_norms else 0.0
+            )
+        self._losses, self._staleness, self._res_norms = [], [], []
+        return row
+
+    def force_flush(self) -> Optional[Dict[str, float]]:
+        """Apply a final outer update from a partially filled buffer (end of
+        run). Returns a row shaped exactly like the drivers' flush rows."""
+        if int(self.state["buf_count"]) == 0:
+            return None
+        return self._flush_row(self.flush())
 
     # --- (c) canonical checkpoint schema ----------------------------------
     def checkpoint_state(self) -> Dict[str, Any]:
@@ -613,6 +643,7 @@ class AsyncBufferAggregator(Aggregator):
                 (float(slot["finish"]), ev.index, ev, snapshot, int(slot["version"])),
             )
             self._busy.add(ev.client)
+            self._on_dispatch(ev, snapshot, int(slot["version"]))
 
     @classmethod
     def checkpoint_template(
@@ -755,28 +786,6 @@ class AsyncFederationDriver(AsyncBufferAggregator):
             self.work_wasted += ev.duration
         self._dispatch()
         return row
-
-    def _flush_row(self, flush_metrics) -> Dict[str, float]:
-        row = {k: float(v) for k, v in flush_metrics.items()}
-        row["sim_time"] = self.sim_time
-        row["train_loss_mean"] = (
-            float(jnp.mean(jnp.asarray(self._losses))) if self._losses else 0.0
-        )
-        row["admitted_staleness"] = list(self._staleness)
-        row["uplink_bytes_total"] = self.uplink_bytes_total
-        if self.residuals is not None:
-            row["uplink_residual_norm"] = (
-                sum(self._res_norms) / len(self._res_norms) if self._res_norms else 0.0
-            )
-        self._losses, self._staleness, self._res_norms = [], [], []
-        return row
-
-    def force_flush(self) -> Optional[Dict[str, float]]:
-        """Apply a final outer update from a partially filled buffer (end of
-        run). Returns a row shaped exactly like ``step()``'s flush rows."""
-        if int(self.state["buf_count"]) == 0:
-            return None
-        return self._flush_row(self.flush())
 
     def run_updates(
         self,

@@ -142,10 +142,23 @@ def flush_buffer(
     carry zero weight, so a partial (forced) flush aggregates only what arrived.
     ``apply_fn`` swaps in a drop-in server phase (the ``--fused-server``
     flat-buffer pass over the (M, N) buffer), exactly as in ``federated_round``.
+
+    Flushing an EMPTY buffer is a no-op on the core lanes: a zero-delta outer
+    step would still decay FedMom/FedAdam statistics and bump the model version
+    (aging every in-flight client's staleness for a round in which nothing
+    aggregated). The guard is a straight-line per-leaf ``jnp.where`` on
+    ``buf_count > 0`` — NOT ``lax.cond`` — because ``where(True, new, old)``
+    returns ``new`` bitwise, preserving the sync≡async flush identity, while a
+    cond-compiled flush drifts 1 ulp (see ``admit_delta``). The runtime's
+    deadline-triggered partial flushes are what hit the empty path in practice.
     """
     core = {k: state[k] for k in ("params", "outer", "round", "rng")}
     new_core, metrics = (apply_fn or apply_aggregate)(
         fed, core, state["buffer"], client_weights=state["buf_weights"]
+    )
+    nonempty = state["buf_count"] > 0
+    new_core = jax.tree_util.tree_map(
+        lambda new, old: jnp.where(nonempty, new, old), new_core, core
     )
     count = state["buf_count"].astype(jnp.float32)
     metrics = dict(

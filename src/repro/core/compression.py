@@ -87,6 +87,12 @@ def topk_compress(
     the returned one under the same client id (see :class:`TopKCodec` /
     ``core/federated.init_uplink_residuals``). Calling without ``error`` silently
     restarts feedback from zero — correct only for a client's first-ever upload.
+
+    Exactly ``k = max(1, int(size * k_fraction))`` entries survive per tensor:
+    selection is an index scatter from ``lax.top_k`` (ties broken toward the
+    lower flat index, top_k's documented order), NOT a ``|x| >= thresh`` mask —
+    a threshold mask keeps every tied entry, overshooting k and breaking the
+    exact byte accounting ``uplink_bytes`` / ``payload_nbytes`` promise.
     """
     if error is None:
         error = init_error_feedback(tree)
@@ -95,9 +101,8 @@ def topk_compress(
         xf = x.astype(jnp.float32) + e
         flat = xf.reshape(-1)
         k = max(1, int(flat.size * k_fraction))
-        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
-        mask = jnp.abs(xf) >= thresh
-        kept = jnp.where(mask, xf, 0.0)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        kept = jnp.zeros_like(flat).at[idx].set(flat[idx]).reshape(xf.shape)
         return kept.astype(x.dtype), xf - kept
 
     out = jax.tree_util.tree_map(one, tree, error)
@@ -297,13 +302,14 @@ class TopKCodec(Codec):
         return uplink_bytes(params_like, "topk", self.k_fraction)
 
     def payload_nbytes(self, payload) -> float:
-        import numpy as np
-
+        # Exactly k entries per leaf cross the wire — count them analytically,
+        # not by scanning for nonzeros: a kept entry whose VALUE is 0.0 (zero
+        # delta + zero residual) still ships its (index, value) pair, so a
+        # nonzero scan under-bills all-zero and tie-heavy payloads.
         leaves = jax.tree_util.tree_leaves(payload)
         idx = self._index_nbytes(sum(x.size for x in leaves))
-        return float(
-            sum(int((np.asarray(x) != 0).sum()) for x in leaves)  # kept entries
-        ) * (4.0 + idx)  # float32 value + flat-buffer index per entry
+        kept = sum(max(1, int(x.size * self.k_fraction)) for x in leaves)
+        return float(kept) * (4.0 + idx)  # float32 value + flat-buffer index
 
 
 UPLINK_SCHEMES = ("float32", "bf16", "int8", "topk")

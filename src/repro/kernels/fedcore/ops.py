@@ -385,6 +385,11 @@ class FusedTopKCodec(TopKCodec):
         kept = max(1, int(n * self.k_fraction))
         return float(kept) * (4.0 + _topk_index_nbytes(n))
 
+    def payload_nbytes(self, payload) -> float:
+        # same GLOBAL budget as nbytes — the per-leaf analytic count inherited
+        # from TopKCodec would over-bill the flat codec's shared k
+        return self.nbytes(payload)
+
 
 class FusedBf16Codec(Bf16Codec):
     """Flat-buffer bf16 stochastic rounding: one fused add-noise/truncate/cast

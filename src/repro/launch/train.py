@@ -46,6 +46,17 @@ deadline becomes a per-dispatch budget and the partial delta admits at the
 fractional weight. Per-round mean τ_i/τ, full-τ fraction and rescued-compute
 estimates are logged.
 
+Cross-process runtime (``--runtime sockets``, docs/runtime.md): the simulated
+single-process timeline becomes a real deployment — ``--role server`` owns the
+buffered aggregator, the dispatch manifest and every client's data cursor
+behind a length-prefixed socket protocol; N ``--role client`` worker processes
+pull self-describing assignments, run the same jitted client phase and push
+encoded uplink payloads back. Leases redispatch work from dead workers,
+``--flush-deadline`` keeps rounds progressing past stragglers, ``--chaos-*``
+injects drop/delay/kill faults, and because the server alone owns resumable
+state, ``--resume`` after a server kill replays the remainder bitwise. With
+the same seeds the socket run's final params are bitwise the in-process run's.
+
 Server-side aggregation is driven through the unified ``Aggregator`` seam
 (``core/aggregator.py``): ``SyncAggregator`` / ``AsyncFederationDriver`` own
 the admission rule, the weight policy and the canonical checkpoint schema —
@@ -104,6 +115,15 @@ from repro.metrics import (
     wallclock_speedup,
 )
 from repro.models import build_model
+from repro.runtime import ChaosConfig, ClientWorker, FederationDriver, SocketBackend
+
+
+def _chaos_from_args(args):
+    chaos = ChaosConfig(
+        drop=args.chaos_drop, delay=args.chaos_delay, kill=args.chaos_kill,
+        seed=args.chaos_seed,
+    )
+    return chaos if chaos.active else None
 
 
 def parse_args(argv=None):
@@ -184,6 +204,38 @@ def parse_args(argv=None):
     ap.add_argument("--max-staleness", type=int, default=0,
                     help="async: reject deltas older than this many server rounds "
                          "(0 = accept any age)")
+    ap.add_argument(
+        "--runtime", default="inproc", choices=["inproc", "sockets"],
+        help="inproc: the simulated single-process timeline; sockets: a real "
+             "cross-process deployment — this process is the aggregation "
+             "server (--role server) or one client worker (--role client) "
+             "speaking the length-prefixed socket protocol (docs/runtime.md). "
+             "Requires --aggregation async",
+    )
+    ap.add_argument("--role", default="server", choices=["server", "client"],
+                    help="--runtime sockets: which process this is")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="server: listen port (0 = pick a free one, printed at "
+                         "startup); client: the server's port")
+    ap.add_argument("--worker-id", default="worker-0",
+                    help="--role client: this worker's name (lease bookkeeping)")
+    ap.add_argument("--lease-timeout", type=float, default=30.0,
+                    help="server: seconds before a granted-but-unreturned "
+                         "assignment is redispatched to another worker")
+    ap.add_argument("--io-timeout", type=float, default=30.0,
+                    help="sockets: per-request socket timeout")
+    ap.add_argument("--flush-deadline", type=float, default=None,
+                    help="server: flush a partially filled buffer when the next "
+                         "in-order result stalls this many seconds (default: "
+                         "wait forever — preserves exact parity with inproc)")
+    ap.add_argument("--chaos-drop", type=float, default=0.0,
+                    help="fault injection: P(outbound message dropped)")
+    ap.add_argument("--chaos-delay", type=float, default=0.0,
+                    help="fault injection: P(outbound message delayed)")
+    ap.add_argument("--chaos-kill", type=float, default=0.0,
+                    help="fault injection: P(process hard-exits before a send)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log", default=None)
@@ -249,6 +301,11 @@ def run(args, cfg=None) -> dict:
         if args.uplink != "float32" else None
     )
 
+    if args.runtime == "sockets" and args.aggregation != "async":
+        raise SystemExit(
+            "--runtime sockets requires --aggregation async: the socket server "
+            "IS the buffered-aggregation event loop (docs/runtime.md)"
+        )
     if args.aggregation == "async":
         if args.keep_opt:
             raise SystemExit(
@@ -257,6 +314,8 @@ def run(args, cfg=None) -> dict:
                 "may serve a different model version, so persisted inner Adam "
                 "state would be silently stale"
             )
+        if args.runtime == "sockets" and args.role == "client":
+            return _run_worker(args, model, fed, pcfg, streams, codec)
         return _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec)
 
     def loss_fn(p, b):
@@ -405,6 +464,33 @@ _ASYNC_RESUME_ARGS = (
 )
 
 
+def _run_worker(args, model, fed, pcfg, streams, codec=None) -> dict:
+    """``--runtime sockets --role client``: one pure-compute worker process.
+
+    It builds the SAME model/fed/participation configuration as the server (so
+    both compile the same jitted client phase) but owns no federation state —
+    every assignment ships the params snapshot, residual row, rng and the
+    population client's data cursor (docs/runtime.md). The streams constructed
+    here are cursor *receptacles*: the authoritative cursors live on the
+    server and ride the wire.
+    """
+    if args.partial_progress:
+        pcfg = dataclasses.replace(
+            pcfg, partial_progress=True, local_steps=args.local_steps
+        )
+    worker = ClientWorker(
+        lambda p, b: model.loss(p, b), fed, pcfg,
+        streams=streams, batch_size=args.batch,
+        host=args.host, port=args.port, codec=codec,
+        name=args.worker_id, io_timeout=args.io_timeout,
+        chaos=_chaos_from_args(args),
+    )
+    print(f"worker {args.worker_id} serving {args.host}:{args.port}")
+    n = worker.run()
+    print(f"worker {args.worker_id} done after {n} assignments")
+    return {"completed": n}
+
+
 def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=None) -> dict:
     """Event-driven FedBuff-style training: K busy client slots, a server-side
     delta buffer, one outer update per ``--buffer-size`` admitted deltas.
@@ -492,12 +578,33 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
                   f"(dispatch cursor {dispatch['cursor']}, "
                   f"sim_time {dispatch['sim_time']:.2f})")
 
-    driver = AsyncFederationDriver(
-        loss_fn, fed, acfg, pcfg, make_batches,
-        seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
-        codec=codec, state=state, dispatch=dispatch,
-        fused_server=args.fused_server,
-    )
+    backend = None
+    if args.runtime == "sockets":
+        # the server owns every population client's data cursor: it ships the
+        # cursor out with each assignment and commits the advanced cursor in
+        # event order, so the checkpointed cursors stay consistent with the
+        # dispatch manifest (any worker can then serve any client, and resume
+        # recreates in-flight assignments with the cursor they shipped with)
+        backend = SocketBackend(
+            host=args.host, port=args.port,
+            stream_states=[s.state_dict() for s in streams],
+            lease_timeout=args.lease_timeout, io_timeout=args.io_timeout,
+            chaos=_chaos_from_args(args),
+        )
+        print(f"server listening on {backend.host}:{backend.port}", flush=True)
+        driver = FederationDriver(
+            backend, fed, acfg, pcfg, flush_deadline=args.flush_deadline,
+            seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
+            codec=codec, state=state, dispatch=dispatch,
+            fused_server=args.fused_server,
+        )
+    else:
+        driver = AsyncFederationDriver(
+            loss_fn, fed, acfg, pcfg, make_batches,
+            seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
+            codec=codec, state=state, dispatch=dispatch,
+            fused_server=args.fused_server,
+        )
 
     # reference: what the deadline-masking sync schedule pays to aggregate the
     # same number of client deltas (cached cumulative replay of plan_round)
@@ -573,14 +680,25 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
                        "train": {"deltas_admitted": deltas_admitted[0]},
                        "sim_time": row["sim_time"]},
             )
-            for ci in range(args.population):
-                ckpt.save_client(u, ci, streams[ci].state_dict())
+            # the cursor source of truth differs by runtime: inproc mutates the
+            # stream objects directly; sockets commits returned cursors into
+            # the backend in event order
+            cursors = (
+                backend.snapshot_stream_states() if backend is not None
+                else [streams[ci].state_dict() for ci in range(args.population)]
+            )
+            for ci, cur in enumerate(cursors):
+                ckpt.save_client(u, ci, cur)
 
-    if args.rounds > start_update:
-        driver.run_updates(args.rounds - start_update, on_update=on_update)
-    else:
-        print(f"nothing to do: checkpoint already at update {start_update - 1} "
-              f"of {args.rounds}")
+    try:
+        if args.rounds > start_update:
+            driver.run_updates(args.rounds - start_update, on_update=on_update)
+        else:
+            print(f"nothing to do: checkpoint already at update {start_update - 1} "
+                  f"of {args.rounds}")
+    finally:
+        if backend is not None:
+            backend.close(linger=1.0)  # let workers pull the "done" answer
     return {"history": history, "state": driver.state, "model": model,
             "config": cfg, "driver": driver}
 

@@ -1,0 +1,51 @@
+"""Cross-process federation runtime (Photon's deployment shape, §4).
+
+``runtime.driver`` holds the backend-pluggable :class:`FederationDriver` (the
+simulated in-process timeline is one backend, the socket runtime another),
+``runtime.server``/``runtime.worker`` the server and client processes,
+``runtime.transport`` the length-prefixed wire format and retry/backoff
+primitives, ``runtime.chaos`` the fault-injection hooks. See docs/runtime.md.
+"""
+from repro.runtime.chaos import ChaosConfig, ChaosMonkey, KILL_EXIT_CODE
+from repro.runtime.driver import (
+    Assignment,
+    ClientBackend,
+    ClientResult,
+    FederationDriver,
+    LocalClientBackend,
+    build_client_phase,
+)
+from repro.runtime.server import SocketBackend
+from repro.runtime.transport import (
+    Backoff,
+    Message,
+    TransportError,
+    connect,
+    decode_msg,
+    encode_msg,
+    recv_msg,
+    send_msg,
+)
+from repro.runtime.worker import ClientWorker
+
+__all__ = [
+    "Assignment",
+    "Backoff",
+    "ChaosConfig",
+    "ChaosMonkey",
+    "ClientBackend",
+    "ClientResult",
+    "ClientWorker",
+    "FederationDriver",
+    "KILL_EXIT_CODE",
+    "LocalClientBackend",
+    "Message",
+    "SocketBackend",
+    "TransportError",
+    "build_client_phase",
+    "connect",
+    "decode_msg",
+    "encode_msg",
+    "recv_msg",
+    "send_msg",
+]

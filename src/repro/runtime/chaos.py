@@ -1,0 +1,68 @@
+"""Fault injection for the cross-process runtime (the ``--chaos`` flags).
+
+Every outbound message on either end rolls one seeded die and suffers at most
+one of: process KILL (``os._exit`` — the hard crash the lease/redispatch and
+checkpoint-resume machinery must absorb), message DROP (the frame is never
+sent; the peer recovers via its own timeout + retry), or DELAY (the send is
+held for ``delay_s`` — exercises lease expiry and the deadline flush without
+killing anyone).
+
+The generator is seeded per ``(seed, role)`` so a chaos run is reproducible
+per process and the server's dice are independent of each worker's.
+"""
+from __future__ import annotations
+
+import os
+import random
+import sys
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChaosConfig:
+    drop: float = 0.0  # P(outbound message silently dropped)
+    delay: float = 0.0  # P(outbound message held for delay_s)
+    kill: float = 0.0  # P(process exits hard before sending)
+    delay_s: float = 0.2
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("drop", "delay", "kill"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"chaos {name} probability {p} outside [0, 1]")
+
+    @property
+    def active(self) -> bool:
+        return (self.drop + self.delay + self.kill) > 0.0
+
+
+KILL_EXIT_CODE = 137  # what SIGKILL would report — supervisors respawn on it
+
+
+class ChaosMonkey:
+    """One die roll per outbound message; at most one fault fires."""
+
+    def __init__(self, cfg: ChaosConfig, role: str):
+        self.cfg = cfg
+        self.role = role
+        self._rng = random.Random(f"{cfg.seed}:{role}")
+
+    def on_send(self) -> bool:
+        """Roll before a send. Returns True when the message must be DROPPED.
+        May not return at all (kill)."""
+        if not self.cfg.active:
+            return False
+        r = self._rng.random()
+        if r < self.cfg.kill:
+            print(f"[chaos:{self.role}] killed before send", file=sys.stderr, flush=True)
+            os._exit(KILL_EXIT_CODE)
+        r -= self.cfg.kill
+        if r < self.cfg.drop:
+            return True
+        r -= self.cfg.drop
+        if r < self.cfg.delay:
+            import time
+
+            time.sleep(self.cfg.delay_s)
+        return False

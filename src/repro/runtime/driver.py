@@ -1,0 +1,304 @@
+"""Backend-pluggable federation driver — the shared seam between the simulated
+in-process timeline and the real cross-process socket runtime.
+
+The event order, admission policy, residual custody and checkpoint schema all
+live in :class:`repro.core.AsyncBufferAggregator`; what varies between "one
+process simulating everything" and "N worker processes on a network" is only
+*who executes a dispatched slot's local training*. That seam is
+:class:`ClientBackend`:
+
+    submit(assignment)        — a slot was dispatched; here is everything needed
+                                to compute it (fired from the aggregator's
+                                ``_on_dispatch`` hook, including replayed slots
+                                on crash-resume)
+    result(index, timeout)    — block until the slot's upload is available
+    commit(index, result)     — the upload was processed in event order; retire
+                                the assignment (and persist data cursors)
+
+Assignments are **fully self-describing and pure**: params snapshot and version
+tag fixed at dispatch, the client's error-feedback residual row, the
+per-dispatch uplink rng (``fold_in(uplink_rng, index)``), the realized τ_i and
+the client's data cursor. Because the aggregator holds each client in at most
+one slot at a time (``_busy``), the row/cursor a slot carries cannot change
+between dispatch and completion — so executing an assignment is idempotent:
+a redispatched or duplicated execution returns the identical result, which is
+what makes lease-expiry redispatch and first-result-wins dedup safe, and why
+the server process alone checkpoints everything.
+
+:class:`FederationDriver` + :class:`LocalClientBackend` reproduces the legacy
+:class:`repro.core.AsyncFederationDriver` BITWISE (tested) — the simulated
+timeline is now just one pluggable backend; the socket backend in
+``runtime/server.py`` is another.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregator import AsyncBufferAggregator
+from repro.core.compression import Codec
+from repro.core.federated import FederatedConfig, run_clients
+from repro.core.async_agg import AsyncAggConfig
+from repro.core.sampler import ParticipationConfig
+
+
+@dataclass
+class Assignment:
+    """One dispatched slot's work order — everything a worker needs, nothing
+    the worker must remember."""
+
+    index: int  # dispatch index: the idempotency key
+    client: int  # population client id (data + residual ownership)
+    version: int  # model version the snapshot was taken at
+    local_steps: int  # realized τ_i under partial progress (0 → full τ)
+    params: Any  # params snapshot (by reference — jax arrays are immutable)
+    residual: Any = None  # (1, ...) error-feedback row, stateful codecs only
+    rng: Any = None  # per-dispatch uplink key, codec runs only
+    stream_state: Any = None  # JSON data cursor (socket runtime ships it)
+
+
+@dataclass
+class ClientResult:
+    """One slot's upload: exactly what crosses the uplink, plus bookkeeping."""
+
+    index: int
+    client: int
+    payload: Any  # encoded codec payload (client axis stripped)
+    residual: Any  # updated (1, ...) EF row, stateful codecs only
+    loss: float  # last local-step train loss
+    stream_state: Any = None  # advanced data cursor (socket runtime)
+
+
+class ClientBackend:
+    """Executes assignments; owns nothing resumable except data cursors."""
+
+    def submit(self, assignment: Assignment) -> None:
+        raise NotImplementedError
+
+    def result(self, index: int, timeout: Optional[float] = None) -> ClientResult:
+        """Block until slot ``index`` completed. Raises ``TimeoutError`` after
+        ``timeout`` seconds so the driver can interleave deadline flushes."""
+        raise NotImplementedError
+
+    def commit(self, index: int, result: ClientResult) -> None:
+        """Called in event order after the driver processed ``result``."""
+
+    def close(self) -> None:
+        pass
+
+
+def build_client_phase(
+    loss_fn: Callable,
+    fed: FederatedConfig,
+    codec: Optional[Codec],
+    partial_progress: bool,
+):
+    """The jitted C=1 local-training phase every backend runs — one shared
+    definition so the in-process simulator and the worker processes compile the
+    *same* XLA program (the bitwise-parity anchor)."""
+    fed1 = replace(fed, clients_per_round=1, keep_inner_state=False)
+    stateful = codec is not None and codec.stateful
+
+    def _client(p, r, b, extra):
+        st = {"params": p, "round": r}
+        kw: Dict[str, Any] = {}
+        if codec is not None:
+            st["rng"] = extra["rng"]
+        if stateful:
+            kw["residuals"] = extra["res"]
+        if partial_progress:
+            kw["tau_steps"] = extra["tau"]
+        return run_clients(loss_fn, fed1, st, b, codec=codec, **kw)
+
+    return jax.jit(_client)
+
+
+class LocalClientBackend(ClientBackend):
+    """In-process simulated execution: assignments run lazily when the driver
+    pops their completion event, in event order — the same instant the legacy
+    ``AsyncFederationDriver`` runs ``make_batches`` + the client phase, so the
+    per-client data-draw order and every float are identical."""
+
+    def __init__(
+        self,
+        loss_fn: Callable,
+        fed: FederatedConfig,
+        pcfg: ParticipationConfig,
+        make_batches: Callable[[int], Dict[str, jax.Array]],
+        codec: Optional[Codec] = None,
+    ):
+        self.fed = fed
+        self.make_batches = make_batches
+        self._stateful = codec is not None and codec.stateful
+        self._partial = pcfg.partial_progress
+        self._client_fn = build_client_phase(loss_fn, fed, codec, pcfg.partial_progress)
+        self._pending: Dict[int, Assignment] = {}
+
+    def submit(self, a: Assignment) -> None:
+        self._pending[a.index] = a
+
+    def result(self, index: int, timeout: Optional[float] = None) -> ClientResult:
+        a = self._pending.pop(index)
+        batches = self.make_batches(a.client)
+        extra: Dict[str, Any] = {}
+        if a.rng is not None:
+            extra["rng"] = a.rng
+        if self._partial:
+            extra["tau"] = jnp.asarray(
+                [a.local_steps or self.fed.local_steps], jnp.int32
+            )
+        if self._stateful:
+            extra["res"] = a.residual
+        deltas, aux = self._client_fn(
+            a.params, jnp.asarray(a.version, jnp.int32), batches, extra
+        )
+        payload = jax.tree_util.tree_map(lambda d: d[0], deltas)
+        return ClientResult(
+            index=index,
+            client=a.client,
+            payload=payload,
+            residual=aux["residuals"] if self._stateful else None,
+            loss=float(aux["step_metrics"]["loss"][-1]),
+        )
+
+
+class FederationDriver(AsyncBufferAggregator):
+    """Event-driven federation over a pluggable :class:`ClientBackend`.
+
+    Results are admitted strictly in simulated-event order (the heap's pop
+    order), whatever order they physically arrive in — a reorder buffer keyed
+    by dispatch index. Combined with self-describing idempotent assignments
+    this makes the socket runtime's final state bitwise-equal to the
+    in-process simulator's for the same seeds (acceptance test).
+
+    ``flush_deadline`` (seconds, wall clock) arms the partial-participation
+    escape hatch: when the next in-order result stalls longer than the
+    deadline, the server flushes whatever the buffer holds so rounds keep
+    progressing; an empty-buffer deadline flush is a state no-op
+    (``async_agg.flush_buffer``'s ``buf_count == 0`` guard). Leave it ``None``
+    to preserve exact parity with the simulator.
+    """
+
+    def __init__(
+        self,
+        backend: ClientBackend,
+        fed: FederatedConfig,
+        acfg: AsyncAggConfig,
+        pcfg: ParticipationConfig,
+        *,
+        flush_deadline: Optional[float] = None,
+        **kw,
+    ):
+        # the backend must exist before super().__init__: construction fires
+        # _on_dispatch for the initial K slots (or the restored manifest's)
+        self.backend = backend
+        self.flush_deadline = flush_deadline
+        super().__init__(fed, acfg, pcfg, **kw)
+
+    # --- dispatch → assignment -------------------------------------------
+    def _on_dispatch(self, ev, snapshot, version: int) -> None:
+        if not ev.completes:
+            return  # unavailable/dropped clients never produce an upload
+        rng = residual = None
+        if self.codec is not None:
+            rng = jax.random.fold_in(self._uplink_rng, ev.index)
+        if self.residuals is not None:
+            residual = self._res_gather(
+                self.residuals, jnp.asarray(ev.client, jnp.int32)
+            )
+        self.backend.submit(
+            Assignment(
+                index=ev.index,
+                client=ev.client,
+                version=version,
+                local_steps=(ev.local_steps if self.pcfg.partial_progress else 0),
+                params=snapshot,
+                residual=residual,
+                rng=rng,
+            )
+        )
+
+    # --- event loop -------------------------------------------------------
+    def _await_result(self, index: int, rows: List[Dict[str, float]]) -> ClientResult:
+        while True:
+            try:
+                return self.backend.result(index, timeout=self.flush_deadline)
+            except TimeoutError:
+                # deadline-triggered partial flush: keep rounds progressing
+                # while a leased-out/straggling slot stalls the event order.
+                # With an empty buffer the flush is a core-state no-op, so a
+                # quiet network cannot spuriously decay the outer optimizer.
+                if int(self.state["buf_count"]) > 0:
+                    rows.append(self._flush_row(self.flush()))
+                else:
+                    self.flush()
+
+    def step(self) -> List[Dict[str, float]]:
+        """Advance by one completion event; returns this step's flush rows
+        (possibly several: deadline flushes + the buffer-full flush)."""
+        rows: List[Dict[str, float]] = []
+        ev, snapshot, version = self._pop_completion()
+        if ev.completes:
+            staleness = int(self.state["round"]) - version
+            rejected = 0 < self.acfg.max_staleness < staleness
+            # unlike the in-process simulator we cannot skip a known-stale
+            # slot's compute — the worker may already be training — but the
+            # result is still fetched so the data cursor advances identically
+            res = self._await_result(ev.index, rows)
+            if rejected and self.residuals is None:
+                self.work_wasted += ev.duration
+            else:
+                if self.residuals is not None:
+                    cid = jnp.asarray(ev.client, jnp.int32)
+                    row = jax.tree_util.tree_map(jnp.asarray, res.residual)
+                    # the residual belongs to the client regardless of what
+                    # the server decides about this upload
+                    self.residuals = self._res_scatter(self.residuals, cid, row)
+                    self._res_norms.append(float(self._res_norm_fn(row)))
+                payload = jax.tree_util.tree_map(jnp.asarray, res.payload)
+                self.uplink_bytes_total += self._bytes_per_upload
+                m = self.admit(payload, version, self.event_weight(ev))
+                if float(m["accepted"]) > 0:
+                    self.work_completed += ev.duration
+                    self._staleness.append(float(m["staleness"]))
+                    self._losses.append(res.loss)
+                else:  # rejected at admission: must not skew the flush row
+                    self.work_wasted += ev.duration
+            self.backend.commit(ev.index, res)
+            if self.should_flush():
+                rows.append(self._flush_row(self.flush()))
+        else:
+            self.work_wasted += ev.duration
+        self._dispatch()
+        return rows
+
+    def run_updates(
+        self,
+        n_updates: int,
+        on_update: Optional[Callable[[int, Dict[str, float]], None]] = None,
+        max_events: Optional[int] = None,
+    ) -> List[Dict[str, float]]:
+        """Run until ``n_updates`` outer updates (deadline flushes count — they
+        step the outer optimizer like any flush)."""
+        history: List[Dict[str, float]] = []
+        budget = max_events if max_events is not None else 1000 * max(1, n_updates)
+        while len(history) < n_updates and budget > 0:
+            budget -= 1
+            for row in self.step():
+                if len(history) >= n_updates:
+                    break
+                row["update"] = len(history)
+                history.append(row)
+                if on_update is not None:
+                    on_update(len(history) - 1, row)
+        if len(history) < n_updates:
+            raise RuntimeError(
+                f"event budget exhausted after {len(history)}/{n_updates} outer "
+                f"updates — mostly-offline population, zero weights, or "
+                f"max_staleness rejecting everything; raise max_events or "
+                f"loosen the configuration"
+            )
+        return history

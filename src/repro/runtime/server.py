@@ -1,0 +1,236 @@
+"""Server side of the cross-process runtime: a :class:`SocketBackend` that
+hands dispatched slots to remote worker processes over the length-prefixed
+transport.
+
+Protocol (worker-initiated request/response over a persistent connection):
+
+    pull  {worker}                → work {index, client, version, local_steps,
+                                          stream_state} + trees {params,
+                                          residual?, rng?}
+                                  | wait {}    (no grantable slot right now)
+                                  | done {}    (run finished — exit)
+    push  {index, client, loss, stream_state} + trees {payload, residual?}
+                                  → ack {index}
+
+Fault tolerance:
+
+* **Leases.** A granted slot carries a wall-clock lease. If the worker dies or
+  stalls past ``lease_timeout``, the next ``pull`` (from any worker) re-grants
+  the slot — the assignment was never consumed, only leased. The same worker
+  re-pulling its own unexpired lease is also re-granted (a dropped ``work``
+  response must not wedge the slot until expiry).
+* **Idempotent redispatch.** Assignments are pure (see ``runtime/driver``), so
+  two workers racing the same slot return identical results; the first ``push``
+  wins, duplicates are acked and discarded.
+* **Data cursors.** The server owns every population client's stream state; it
+  rides out in the assignment and the advanced cursor rides back in the push.
+  It is committed only when the driver processes the result *in event order*,
+  which keeps checkpointed cursors consistent with the dispatch manifest —
+  a crash-resume recreates in-flight assignments with exactly the cursor they
+  originally shipped.
+
+The backend is intentionally dumb about federation: every decision (admission,
+staleness, flushes, checkpoints) stays in :class:`FederationDriver` on top of
+the ``AsyncBufferAggregator`` it shares with the in-process path.
+"""
+from __future__ import annotations
+
+import copy
+import socket
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.runtime.chaos import ChaosConfig, ChaosMonkey
+from repro.runtime.driver import Assignment, ClientBackend, ClientResult
+from repro.runtime.transport import Message, TransportError, recv_msg, send_msg
+
+
+class SocketBackend(ClientBackend):
+    def __init__(
+        self,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        *,
+        stream_states: Optional[List[Dict[str, Any]]] = None,
+        lease_timeout: float = 30.0,
+        io_timeout: float = 30.0,
+        chaos: Optional[ChaosConfig] = None,
+    ):
+        self.lease_timeout = lease_timeout
+        self.io_timeout = io_timeout
+        self.stream_states = stream_states  # index = population client id
+        self._monkey = (
+            ChaosMonkey(chaos, "server") if chaos is not None and chaos.active else None
+        )
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._pending: Dict[int, Assignment] = {}  # index → live assignment
+        self._leases: Dict[int, tuple] = {}  # index → (deadline, worker)
+        self._results: Dict[int, ClientResult] = {}  # arrived, not yet processed
+        self._done = False
+        self._stop = threading.Event()
+        self._conns: List[socket.socket] = []
+        self._srv = socket.create_server((host, port))
+        self._srv.settimeout(0.2)
+        self.host, self.port = self._srv.getsockname()[:2]
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="runtime-accept", daemon=True
+        )
+        self._accept_thread.start()
+
+    # --- ClientBackend ----------------------------------------------------
+    def submit(self, a: Assignment) -> None:
+        if self.stream_states is not None:
+            a.stream_state = copy.deepcopy(self.stream_states[a.client])
+        with self._cv:
+            self._pending[a.index] = a
+            self._cv.notify_all()
+
+    def result(self, index: int, timeout: Optional[float] = None) -> ClientResult:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while index not in self._results:
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TimeoutError(f"slot {index} still outstanding")
+                    self._cv.wait(min(remaining, 0.5))
+                else:
+                    self._cv.wait(0.5)
+            return self._results[index]
+
+    def commit(self, index: int, result: ClientResult) -> None:
+        with self._cv:
+            self._pending.pop(index, None)
+            self._leases.pop(index, None)
+            self._results.pop(index, None)
+        if self.stream_states is not None and result.stream_state is not None:
+            self.stream_states[result.client] = result.stream_state
+
+    def finish(self) -> None:
+        """Start answering every pull with ``done`` (run complete)."""
+        with self._cv:
+            self._done = True
+            self._cv.notify_all()
+
+    def close(self, linger: float = 0.0) -> None:
+        self.finish()
+        if linger > 0:  # give workers a beat to pull the "done" answer
+            time.sleep(linger)
+        self._stop.set()
+        try:
+            self._srv.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns, self._conns = self._conns, []
+        for c in conns:
+            try:
+                c.close()
+            except OSError:
+                pass
+
+    # --- socket plumbing --------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._srv.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            conn.settimeout(self.io_timeout)
+            with self._lock:
+                self._conns.append(conn)
+            threading.Thread(
+                target=self._serve, args=(conn,), name="runtime-conn", daemon=True
+            ).start()
+
+    def _serve(self, conn: socket.socket) -> None:
+        try:
+            while not self._stop.is_set():
+                msg = recv_msg(conn)
+                if msg.type == "pull":
+                    self._handle_pull(conn, msg)
+                elif msg.type == "push":
+                    self._handle_push(conn, msg)
+                else:
+                    send_msg(conn, "error", {"reason": f"unknown type {msg.type}"})
+        except (TransportError, OSError):
+            pass  # worker went away; its leases expire and redispatch
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _grant(self, worker: str) -> Optional[Assignment]:
+        now = time.monotonic()
+        with self._lock:
+            for index in sorted(self._pending):
+                if index in self._results:
+                    continue  # computed, waiting for in-order processing
+                lease = self._leases.get(index)
+                if lease is not None and lease[0] > now and lease[1] != worker:
+                    continue  # actively leased to someone else
+                self._leases[index] = (now + self.lease_timeout, worker)
+                return self._pending[index]
+        return None
+
+    def _handle_pull(self, conn: socket.socket, msg: Message) -> None:
+        worker = str(msg.meta.get("worker", "?"))
+        if self._done:
+            send_msg(conn, "done", chaos=self._monkey)
+            return
+        a = self._grant(worker)
+        if a is None:
+            send_msg(conn, "wait", chaos=self._monkey)
+            return
+        trees = {"params": a.params}
+        if a.residual is not None:
+            trees["residual"] = a.residual
+        if a.rng is not None:
+            trees["rng"] = a.rng
+        send_msg(
+            conn,
+            "work",
+            meta={
+                "index": a.index,
+                "client": a.client,
+                "version": a.version,
+                "local_steps": a.local_steps,
+                "stream_state": a.stream_state,
+            },
+            trees=trees,
+            chaos=self._monkey,
+        )
+
+    def _handle_push(self, conn: socket.socket, msg: Message) -> None:
+        index = int(msg.meta["index"])
+        result = ClientResult(
+            index=index,
+            client=int(msg.meta["client"]),
+            payload=msg.trees.get("payload"),
+            residual=msg.trees.get("residual"),
+            loss=float(msg.meta["loss"]),
+            stream_state=msg.meta.get("stream_state"),
+        )
+        with self._cv:
+            # first result wins; duplicates (lease races, re-pushed after a
+            # dropped ack) are acked and discarded — results are identical
+            # anyway because assignments are pure
+            if index in self._pending and index not in self._results:
+                self._results[index] = result
+                self._cv.notify_all()
+        send_msg(conn, "ack", {"index": index}, chaos=self._monkey)
+
+    # --- checkpoint support ----------------------------------------------
+    def snapshot_stream_states(self) -> Optional[List[Dict[str, Any]]]:
+        """Data cursors as of every PROCESSED event (commit order) — consistent
+        with the aggregator's dispatch manifest by construction."""
+        if self.stream_states is None:
+            return None
+        return copy.deepcopy(self.stream_states)

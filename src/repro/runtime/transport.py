@@ -1,0 +1,253 @@
+"""Length-prefixed socket transport for the cross-process federation runtime.
+
+Wire format (one message per frame):
+
+    [8-byte big-endian payload length]
+    [4-byte big-endian header length][header JSON (utf-8)][array blobs ...]
+
+The header is ``{"type": ..., "meta": {...}, "arrays": [...]}`` where ``meta``
+is plain JSON (ints, floats, strings, stream-cursor dicts — JSON float reprs
+round-trip float64 exactly, the same discipline as the checkpoint manifests)
+and ``arrays`` lists ``{"key", "dtype", "shape", "nbytes"}`` entries describing
+the raw little-endian array blobs concatenated after the header, in order.
+
+Pytrees cross the wire as *nested containers of arrays* — string-keyed dicts
+plus lists/tuples (the transformer params keep per-layer ``segments`` as a
+list). Each tree field flattens to ``field + SEP + k1 + SEP + k2 + ...`` keys
+(``SEP`` is the ASCII unit separator, which cannot appear in parameter names);
+a list/tuple element's segment is its index prefixed with ``LIST_MARK`` /
+``TUPLE_MARK`` (record/group separators), so the receiver rebuilds the exact
+container types with no out-of-band template. Empty containers don't survive
+the wire (they carry no arrays) — no tree in this codebase has any. bfloat16
+arrays are supported via ml_dtypes (the numpy view jax already depends on).
+
+Everything here is synchronous and explicit: ``send_msg`` / ``recv_msg`` over a
+connected socket, ``recv_exact`` loops until the frame is complete, and EOF or
+a bad magic raises ``TransportError`` so callers can fold it into their
+retry/backoff path.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+SEP = "\x1f"  # unit separator: joins tree-path segments in array keys
+LIST_MARK = "\x1e"  # path segment prefix: this node is a list element
+TUPLE_MARK = "\x1d"  # path segment prefix: this node is a tuple element
+_RESERVED = (SEP, LIST_MARK, TUPLE_MARK)
+_LEN = struct.Struct("!Q")
+_HDR = struct.Struct("!I")
+MAX_FRAME = 1 << 33  # 8 GiB sanity bound — a corrupt length must not OOM us
+
+
+class TransportError(ConnectionError):
+    """Framing/EOF/decoding failure — retryable by reconnecting."""
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # bfloat16 et al. — already a jax dependency
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def flatten_tree(tree: Any, prefix: str) -> List[Tuple[str, np.ndarray]]:
+    """Nested dict/list/tuple containers of arrays → sorted ``(path, array)``
+    list. Container types are encoded in the path segments themselves."""
+    out: List[Tuple[str, np.ndarray]] = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            if any(c in str(k) for c in _RESERVED):
+                raise ValueError(f"tree key {k!r} contains a reserved wire byte")
+            out.extend(flatten_tree(tree[k], prefix + SEP + str(k)))
+        return out
+    if isinstance(tree, (list, tuple)):
+        mark = LIST_MARK if isinstance(tree, list) else TUPLE_MARK
+        for i, v in enumerate(tree):
+            out.extend(flatten_tree(v, prefix + SEP + mark + str(i)))
+        return out
+    return [(prefix, np.asarray(tree))]
+
+
+def _materialize(node: Any) -> Any:
+    """Convert marker-keyed dict nodes back into the list/tuple they encode."""
+    if not isinstance(node, dict):
+        return node
+    keys = list(node)
+    for mark, ctor in ((LIST_MARK, list), (TUPLE_MARK, tuple)):
+        if keys and all(k[:1] == mark for k in keys):
+            order = sorted(keys, key=lambda s: int(s[1:]))
+            return ctor(_materialize(node[k]) for k in order)
+    return {k: _materialize(v) for k, v in node.items()}
+
+
+def unflatten_tree(items: Dict[str, np.ndarray]) -> Any:
+    """Inverse of :func:`flatten_tree` for one field's ``path → array`` map.
+
+    Paths are relative to the field (empty path == the field IS one array)."""
+    if list(items) == [""]:
+        return items[""]
+    root: Dict[str, Any] = {}
+    for path, arr in items.items():
+        parts = path.split(SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return _materialize(root)
+
+
+@dataclass
+class Message:
+    type: str
+    meta: Dict[str, Any] = field(default_factory=dict)
+    trees: Dict[str, Any] = field(default_factory=dict)  # field → np pytree
+
+
+def encode_msg(
+    mtype: str,
+    meta: Optional[Dict[str, Any]] = None,
+    trees: Optional[Dict[str, Any]] = None,
+) -> bytes:
+    arrays: List[Dict[str, Any]] = []
+    blobs: List[bytes] = []
+    for fname, tree in (trees or {}).items():
+        if tree is None:
+            continue
+        if SEP in fname:
+            raise ValueError(f"tree field {fname!r} contains the wire separator")
+        for path, arr in flatten_tree(tree, fname):
+            arr = np.ascontiguousarray(arr)
+            arrays.append(
+                {
+                    "key": path,
+                    "dtype": arr.dtype.name,
+                    "shape": list(arr.shape),
+                    "nbytes": int(arr.nbytes),
+                }
+            )
+            blobs.append(arr.tobytes())
+    header = json.dumps(
+        {"type": mtype, "meta": meta or {}, "arrays": arrays}
+    ).encode("utf-8")
+    return b"".join([_HDR.pack(len(header)), header] + blobs)
+
+
+def decode_msg(payload: bytes) -> Message:
+    if len(payload) < _HDR.size:
+        raise TransportError("frame shorter than its header-length field")
+    (hlen,) = _HDR.unpack_from(payload, 0)
+    try:
+        header = json.loads(payload[_HDR.size : _HDR.size + hlen].decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise TransportError(f"bad message header: {e}") from e
+    offset = _HDR.size + hlen
+    fields: Dict[str, Dict[str, np.ndarray]] = {}
+    for entry in header.get("arrays", ()):
+        n = int(entry["nbytes"])
+        raw = payload[offset : offset + n]
+        if len(raw) != n:
+            raise TransportError("frame truncated inside an array blob")
+        offset += n
+        arr = np.frombuffer(raw, dtype=_np_dtype(entry["dtype"])).reshape(
+            entry["shape"]
+        )
+        fname, _, rel = entry["key"].partition(SEP)
+        fields.setdefault(fname, {})[rel] = arr
+    trees = {fname: unflatten_tree(items) for fname, items in fields.items()}
+    return Message(header["type"], header.get("meta", {}), trees)
+
+
+# ---------------------------------------------------------------------------
+# Socket framing
+# ---------------------------------------------------------------------------
+
+
+def recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(min(1 << 20, n - len(buf)))
+        if not chunk:
+            raise TransportError("connection closed mid-frame")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def send_frame(sock: socket.socket, payload: bytes) -> None:
+    sock.sendall(_LEN.pack(len(payload)) + payload)
+
+
+def recv_frame(sock: socket.socket) -> bytes:
+    (n,) = _LEN.unpack(recv_exact(sock, _LEN.size))
+    if n > MAX_FRAME:
+        raise TransportError(f"frame length {n} exceeds MAX_FRAME")
+    return recv_exact(sock, n)
+
+
+def send_msg(
+    sock: socket.socket,
+    mtype: str,
+    meta: Optional[Dict[str, Any]] = None,
+    trees: Optional[Dict[str, Any]] = None,
+    chaos=None,
+) -> bool:
+    """Send one message; returns False when chaos injection dropped it (the
+    peer sees nothing and must recover via its own timeout). A chaos *kill*
+    never returns at all."""
+    if chaos is not None and chaos.on_send():
+        return False
+    send_frame(sock, encode_msg(mtype, meta, trees))
+    return True
+
+
+def recv_msg(sock: socket.socket) -> Message:
+    return decode_msg(recv_frame(sock))
+
+
+# ---------------------------------------------------------------------------
+# Bounded exponential backoff (client pull/push retry discipline)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Backoff:
+    """Deterministic bounded exponential backoff: base · 2^attempt, capped.
+
+    ``give_up_after`` bounds the TOTAL time since the last success — a worker
+    that cannot reach the server for that long exits instead of spinning
+    forever (the supervisor decides whether to respawn it)."""
+
+    base: float = 0.05
+    cap: float = 2.0
+    give_up_after: float = 60.0
+
+    def __post_init__(self):
+        self._attempt = 0
+        self._since = time.monotonic()
+
+    def reset(self) -> None:
+        self._attempt = 0
+        self._since = time.monotonic()
+
+    def sleep(self) -> bool:
+        """Back off once; returns False when the give-up budget is exhausted."""
+        if time.monotonic() - self._since > self.give_up_after:
+            return False
+        time.sleep(min(self.cap, self.base * (2.0 ** self._attempt)))
+        self._attempt += 1
+        return True
+
+
+def connect(host: str, port: int, timeout: float) -> socket.socket:
+    sock = socket.create_connection((host, port), timeout=timeout)
+    sock.settimeout(timeout)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return sock

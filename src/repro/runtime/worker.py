@@ -1,0 +1,186 @@
+"""Client worker process: pull → local training → push, forever.
+
+A worker is PURE COMPUTE. It owns no federation state: the assignment carries
+the params snapshot, version tag, error-feedback residual row, per-dispatch
+uplink rng and the client's data cursor; the worker loads the cursor into its
+(identically constructed) stream object, draws the τ local batches, runs the
+shared jitted client phase (``runtime.driver.build_client_phase`` — the same
+XLA program the in-process simulator compiles) and pushes back the encoded
+codec payload, updated residual row, advanced cursor and final train loss.
+
+Because assignments are self-describing and the data draw is deterministic in
+the cursor, any worker can serve any population client and re-executing an
+assignment is idempotent — which is exactly what the server's lease/redispatch
+recovery relies on.
+
+Failure discipline: every pull/push is a request/response with an I/O timeout;
+any transport failure (refused, reset, EOF, timeout, chaos-dropped frames)
+tears down the connection and retries under bounded exponential backoff
+(:class:`repro.runtime.transport.Backoff`); the worker exits cleanly when the
+server answers ``done`` or has been unreachable for the backoff's give-up
+budget.
+"""
+from __future__ import annotations
+
+import socket
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import Codec
+from repro.core.federated import FederatedConfig
+from repro.core.sampler import ParticipationConfig
+from repro.runtime.chaos import ChaosConfig, ChaosMonkey
+from repro.runtime.driver import build_client_phase
+from repro.runtime.transport import (
+    Backoff,
+    Message,
+    TransportError,
+    connect,
+    recv_msg,
+    send_msg,
+)
+
+
+class _Dropped(TransportError):
+    """Our own outbound frame was chaos-dropped — retry like any other loss."""
+
+
+class ClientWorker:
+    def __init__(
+        self,
+        loss_fn: Callable,
+        fed: FederatedConfig,
+        pcfg: ParticipationConfig,
+        *,
+        streams: Optional[List[Any]] = None,  # one TokenStream per population client
+        batch_size: int = 1,
+        make_batches: Optional[Callable[[int], Any]] = None,  # pure-in-cid override
+        host: str = "127.0.0.1",
+        port: int = 0,
+        codec: Optional[Codec] = None,
+        name: str = "worker",
+        io_timeout: float = 30.0,
+        poll_interval: float = 0.05,
+        backoff: Optional[Backoff] = None,
+        chaos: Optional[ChaosConfig] = None,
+    ):
+        if (streams is None) == (make_batches is None):
+            raise ValueError("pass exactly one of streams= or make_batches=")
+        self.fed = fed
+        self.streams = streams
+        self.make_batches = make_batches
+        self.batch_size = batch_size
+        self.host, self.port = host, port
+        self.name = name
+        self.io_timeout = io_timeout
+        self.poll_interval = poll_interval
+        self.backoff = backoff or Backoff()
+        self._stateful = codec is not None and codec.stateful
+        self._codec = codec
+        self._partial = pcfg.partial_progress
+        self._client_fn = build_client_phase(loss_fn, fed, codec, pcfg.partial_progress)
+        self._monkey = (
+            ChaosMonkey(chaos, name) if chaos is not None and chaos.active else None
+        )
+        self._sock: Optional[socket.socket] = None
+
+    # --- transport with retry --------------------------------------------
+    def _close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def _rpc(self, mtype: str, meta: Dict[str, Any], trees=None) -> Optional[Message]:
+        """One request/response with reconnect + bounded exponential backoff.
+        Returns None when the server stayed unreachable past the give-up
+        budget (supervisors decide whether to respawn us)."""
+        while True:
+            try:
+                if self._sock is None:
+                    self._sock = connect(self.host, self.port, self.io_timeout)
+                if not send_msg(self._sock, mtype, meta, trees, chaos=self._monkey):
+                    raise _Dropped("chaos dropped our frame")
+                reply = recv_msg(self._sock)
+                self.backoff.reset()
+                return reply
+            except (TransportError, OSError) as e:
+                self._close()
+                if not self.backoff.sleep():
+                    print(f"[{self.name}] giving up: {e}", flush=True)
+                    return None
+
+    # --- the work loop ----------------------------------------------------
+    def run(self, max_assignments: Optional[int] = None) -> int:
+        """Serve until the server says done (or goes away). Returns the number
+        of assignments completed."""
+        done = 0
+        while max_assignments is None or done < max_assignments:
+            reply = self._rpc("pull", {"worker": self.name})
+            if reply is None or reply.type == "done":
+                break
+            if reply.type == "wait":
+                time.sleep(self.poll_interval)
+                continue
+            if reply.type != "work":
+                continue
+            meta, trees = self._execute(reply)
+            ack = self._rpc("push", meta, trees)
+            if ack is None:
+                break
+            done += 1
+        self._close()
+        return done
+
+    def _draw(self, cid: int, stream_state):
+        """τ local batches for ``cid``: from the shipped data cursor (real
+        streams) or a pure-in-cid batch function (tests/toy models — the draw
+        then needs no cursor to be idempotent). Returns (batches, new_cursor)."""
+        if self.streams is None:
+            return self.make_batches(cid), None
+        from repro.data import round_batches
+
+        stream = self.streams[cid]
+        if stream_state is not None:
+            stream.load_state_dict(stream_state)
+        batches = {
+            k: jnp.asarray(v)
+            for k, v in round_batches(
+                [stream], self.fed.local_steps, self.batch_size
+            ).items()
+        }
+        return batches, stream.state_dict()
+
+    def _execute(self, msg: Message):
+        meta = msg.meta
+        cid = int(meta["client"])
+        batches, new_cursor = self._draw(cid, meta.get("stream_state"))
+        params = jax.tree_util.tree_map(jnp.asarray, msg.trees["params"])
+        extra: Dict[str, Any] = {}
+        if self._codec is not None:
+            extra["rng"] = jnp.asarray(msg.trees["rng"])
+        if self._partial:
+            extra["tau"] = jnp.asarray(
+                [int(meta["local_steps"]) or self.fed.local_steps], jnp.int32
+            )
+        if self._stateful:
+            extra["res"] = jax.tree_util.tree_map(jnp.asarray, msg.trees["residual"])
+        deltas, aux = self._client_fn(
+            params, jnp.asarray(int(meta["version"]), jnp.int32), batches, extra
+        )
+        payload = jax.tree_util.tree_map(lambda d: d[0], deltas)
+        out_meta = {
+            "index": int(meta["index"]),
+            "client": cid,
+            "loss": float(aux["step_metrics"]["loss"][-1]),
+            "stream_state": new_cursor,
+        }
+        out_trees: Dict[str, Any] = {"payload": payload}
+        if self._stateful:
+            out_trees["residual"] = aux["residuals"]
+        return out_meta, out_trees

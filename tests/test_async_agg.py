@@ -281,6 +281,40 @@ def test_forced_partial_flush_uses_only_admitted_deltas():
     )
 
 
+def test_empty_buffer_flush_is_a_noop():
+    """Forcing a flush with nothing buffered (the runtime's deadline-triggered
+    path) must leave the core state bitwise untouched: a zero-delta outer step
+    would decay FedAdam/FedMom lanes spuriously and bump the version, aging
+    every in-flight client's staleness for a round in which nothing aggregated."""
+    tau, c = 2, 2
+    fed = FederatedConfig(
+        clients_per_round=c, local_steps=tau, inner=sgd_inner(),
+        outer=OuterOptConfig(name="fedadam", lr=0.5),
+    )
+    acfg = AsyncAggConfig(buffer_size=2, staleness_alpha=0.0)
+    params = make_params()
+    s0 = init_federated_state(fed, params, jax.random.PRNGKey(0))
+    deltas = run_clients(quad_loss, fed, s0, make_batches(tau, c))[0]
+
+    state = init_async_state(fed, acfg, params, jax.random.PRNGKey(0))
+    # one real flush first so the outer lanes carry non-zero Adam statistics
+    for k in range(c):
+        d = jax.tree_util.tree_map(lambda x: x[k], deltas)
+        state, _ = admit_delta(
+            fed, acfg, state, d, jnp.asarray(0, jnp.int32), jnp.asarray(1.0),
+            auto_flush=False,
+        )
+    state, _ = flush_buffer(fed, acfg, state)
+    assert int(state["buf_count"]) == 0
+
+    before = [np.asarray(l) for l in jax.tree_util.tree_leaves(state)]
+    after, m = jax.jit(lambda s: flush_buffer(fed, acfg, s))(state)
+    for a, b in zip(before, jax.tree_util.tree_leaves(after)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    assert int(after["round"]) == int(state["round"])  # version NOT bumped
+    assert float(m["buffer_fill"]) == 0.0
+
+
 # ---------------------------------------------------------------------------
 # Checkpoint round-trips (resume stays exact)
 # ---------------------------------------------------------------------------

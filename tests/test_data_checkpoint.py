@@ -112,6 +112,54 @@ def test_checkpoint_manager_resume_and_gc(tmp_path):
     assert kept == ["round_000002", "round_000003"]
 
 
+def test_latest_round_skips_crash_truncated_manifests(tmp_path):
+    """A kill mid-save leaves a round with a truncated manifest or a missing
+    state blob; latest_round must step over it instead of handing resume a
+    JSONDecodeError, and load_server must still work on the survivor."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=3)
+    state = {"w": jnp.full((3,), 7.0)}
+    mgr.save_server(0, state, extra={"note": "good"})
+
+    # crash mode 1: manifest written but truncated mid-json
+    d1 = tmp_path / "round_000001"
+    d1.mkdir()
+    save_pytree(str(d1 / "server.npz"), state)
+    (d1 / "manifest.json").write_text('{"round": 1, "ex')
+    # crash mode 2: manifest complete but state blob never landed
+    d2 = tmp_path / "round_000002"
+    d2.mkdir()
+    (d2 / "manifest.json").write_text('{"round": 2, "extra": {}}')
+
+    assert mgr.latest_round() == 0
+    loaded, manifest = mgr.load_server(0, state)
+    assert manifest["extra"]["note"] == "good"
+    np.testing.assert_array_equal(np.asarray(loaded["w"]), np.asarray(state["w"]))
+
+
+def test_gc_never_counts_partial_rounds_toward_keep_last(tmp_path):
+    """A crash loop that keeps leaving manifest-less round dirs must not rotate
+    the only complete checkpoints out of existence: gc retains the last
+    keep_last COMPLETE rounds and prunes only partial debris older than the
+    newest complete round."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    state = {"w": jnp.zeros((3,))}
+    mgr.save_server(0, state)
+    mgr.save_server(1, state)
+    # simulate repeated crashes mid-save for rounds 2..4: dirs with state blob
+    # but no committed manifest
+    for rnd in (2, 3, 4):
+        d = tmp_path / f"round_{rnd:06d}"
+        d.mkdir()
+        save_pytree(str(d / "server.npz"), state)
+    # the next successful save must keep rounds {1, 5}, not gc them away
+    mgr.save_server(5, state)
+    kept = sorted(os.listdir(tmp_path))
+    assert "round_000001" in kept and "round_000005" in kept
+    assert mgr.latest_round() == 5
+    # the stale partial dirs were pruned (they sort older than round 5)
+    assert not any(k in kept for k in ("round_000002", "round_000003", "round_000004"))
+
+
 def test_load_rejects_shape_mismatch(tmp_path):
     p = str(tmp_path / "t.npz")
     save_pytree(p, {"w": jnp.zeros((3,))})

@@ -188,6 +188,35 @@ def test_topk_index_bytes_sized_to_flat_length():
     assert codec.payload_nbytes(payload) == uplink_bytes(big, "topk", 0.1)
 
 
+def test_topk_keeps_exactly_k_on_tie_heavy_delta():
+    """Tied magnitudes must NOT inflate the payload: a threshold mask keeps
+    every tied entry (109 of 100 budgeted, historically), while the wire
+    accounting prices exactly k — selection must be an index scatter that keeps
+    exactly k entries, ties broken toward the lower flat index."""
+    codec = TopKCodec(k_fraction=0.1)
+    tied = {"w": jnp.ones((100,), jnp.float32)}  # every magnitude tied
+    payload, res = codec.encode(tied, codec.init_residual(tied))
+    kept_idx = np.flatnonzero(np.asarray(payload["w"]))
+    assert len(kept_idx) == 10  # exactly k, not all 100
+    np.testing.assert_array_equal(kept_idx, np.arange(10))  # deterministic ties
+    np.testing.assert_allclose(  # mass conservation still exact
+        np.asarray(payload["w"] + res["w"]), np.asarray(tied["w"]), rtol=1e-6
+    )
+    assert codec.payload_nbytes(payload) == codec.nbytes(tied)
+    assert codec.payload_nbytes(payload) == uplink_bytes(tied, "topk", 0.1)
+
+
+def test_topk_payload_bytes_on_all_zero_delta():
+    """A kept entry whose VALUE is 0.0 (zero delta, zero residual) still ships
+    its (index, value) pair — nonzero-scanning payload_nbytes under-billed the
+    all-zero upload to 0 bytes while nbytes charged the full k."""
+    codec = TopKCodec(k_fraction=0.1)
+    zero = {"w": jnp.zeros((100,), jnp.float32)}
+    payload, _ = codec.encode(zero, codec.init_residual(zero))
+    assert codec.payload_nbytes(payload) == codec.nbytes(zero)
+    assert codec.payload_nbytes(payload) == uplink_bytes(zero, "topk", 0.1) == 10 * (4 + 2)
+
+
 def test_vmapped_int8_scales_are_per_client():
     """Cohort encode must quantize each client against ITS OWN absmax — a shared
     scale would let one hot client wash out everyone else's resolution."""
