@@ -23,6 +23,13 @@ Three demos, each an end-to-end assertion the CI fast lane runs:
   PYTHONPATH=src python examples/socket_federation.py --demo round
   PYTHONPATH=src python examples/socket_federation.py --demo kill-resume
   PYTHONPATH=src python examples/socket_federation.py --demo chaos
+
+With ``--trace-dir DIR`` the chaos demo runs fully observed: every process
+writes ``--trace`` JSONL there, the server serves live ``/metrics`` (probed),
+and the merged trace must pass ``python -m repro.obs.report DIR --check
+--expect-faults`` — all spans closed or excused by a recorded kill, no orphan
+dispatch ids, the injected faults present in the audit
+(docs/observability.md).
 """
 import argparse
 import json
@@ -88,6 +95,9 @@ def _start_server(args, rounds, ckpt, logpath, resume=False, port=0):
         "--port", str(port), "--ckpt-dir", ckpt,
         "--lease-timeout", "15", "--io-timeout", "30",
     ]
+    if args.trace_dir:
+        cmd += ["--trace", os.path.join(args.trace_dir, "server.jsonl"),
+                "--metrics-port", "0"]
     if resume:
         cmd.append("--resume")
     proc = _spawn(cmd, logpath)
@@ -99,6 +109,10 @@ def _worker_cmd(args, rounds, port, wid, chaos=None):
         "--rounds", str(rounds), "--runtime", "sockets", "--role", "client",
         "--port", str(port), "--worker-id", wid, "--io-timeout", "30",
     ]
+    if args.trace_dir:
+        # respawned incarnations append to the same file; events are keyed by
+        # (proc, pid) so the report tells the incarnations apart
+        cmd += ["--trace", os.path.join(args.trace_dir, f"{wid}.jsonl")]
     if chaos:
         cmd += [
             "--chaos-drop", str(chaos.get("drop", 0)),
@@ -218,6 +232,41 @@ def demo_kill_resume(args, tmp):
     )
 
 
+def _probe_metrics(server, logpath, timeout=60.0):
+    """GET the server's live /metrics endpoint once it announces its port."""
+    import urllib.request
+
+    deadline = time.time() + timeout
+    while time.time() < deadline and server.poll() is None:
+        m = re.search(
+            rb"metrics serving on [\d.]+:(\d+)", open(logpath, "rb").read()
+        )
+        if m:
+            url = f"http://127.0.0.1:{int(m.group(1))}/metrics"
+            try:
+                body = urllib.request.urlopen(url, timeout=5).read().decode()
+            except OSError:
+                time.sleep(0.5)
+                continue
+            assert "fed_" in body, f"metrics endpoint served no fed_ series:\n{body}"
+            print(f"PASS: live metrics endpoint "
+                  f"({sum(1 for l in body.splitlines() if l and l[0] != '#')} series)")
+            return
+        time.sleep(0.2)
+    sys.exit("metrics endpoint never came up")
+
+
+def _check_trace(args, expect_faults):
+    """Validate the merged trace with the report CLI: every span accounted
+    for, no orphan dispatch ids, injected faults present in the audit."""
+    cmd = [sys.executable, "-m", "repro.obs.report", args.trace_dir, "--check",
+           "--chrome", os.path.join(args.trace_dir, "trace.json")]
+    if expect_faults:
+        cmd.append("--expect-faults")
+    subprocess.run(cmd, check=True, env=_env())
+    print(f"PASS: trace check ({args.trace_dir})")
+
+
 def demo_chaos(args, tmp):
     rounds, ckpt = 2, os.path.join(tmp, "sock_ck")
     server, port = _start_server(
@@ -230,6 +279,8 @@ def demo_chaos(args, tmp):
             chaos={"drop": 0.10, "delay": 0.15, "kill": 0.04, "seed": 7 + i},
         )
         workers.append((_spawn(cmd, os.path.join(tmp, f"worker{i}.log")), cmd))
+    if args.trace_dir:
+        _probe_metrics(server, os.path.join(tmp, "server.log"))
     respawns = _supervise_workers(workers, server, tmp, respawn=True)
     assert server.returncode == 0, open(os.path.join(tmp, "server.log")).read()
     assert _round_complete(ckpt, rounds - 1), "chaos run never finished"
@@ -238,6 +289,8 @@ def demo_chaos(args, tmp):
     assert losses and all(np.isfinite(losses)), "non-finite loss under chaos"
     print(f"PASS: chaos run converged (final loss {losses[-1]:.4f}, "
           f"{respawns} worker respawns absorbed)")
+    if args.trace_dir:
+        _check_trace(args, expect_faults=True)
 
 
 def main():
@@ -245,8 +298,14 @@ def main():
     ap.add_argument("--demo", default="round",
                     choices=["round", "kill-resume", "chaos"])
     ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--trace-dir", default=None,
+                    help="write per-process --trace JSONL here, probe the "
+                         "live /metrics endpoint, and validate the merged "
+                         "trace with repro.obs.report (chaos demo)")
     ap.add_argument("--keep-tmp", action="store_true")
     args = ap.parse_args()
+    if args.trace_dir:
+        os.makedirs(args.trace_dir, exist_ok=True)
     tmp = tempfile.mkdtemp(prefix=f"socket_fed_{args.demo.replace('-', '_')}_")
     print(f"workdir: {tmp}")
     {"round": demo_round, "kill-resume": demo_kill_resume,

@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core.async_agg import (
     AsyncAggConfig,
+    admission_record,
     admit_delta,
     flush_buffer,
     init_async_state,
@@ -63,8 +64,11 @@ from repro.core.federated import (
     init_federated_state,
     init_uplink_residuals,
     run_clients,
+    trace_attrs,
 )
 from repro.core.inner_opt import global_norm
+from repro.obs.metrics import observe_staleness
+from repro.obs.tracer import get_tracer
 from repro.core.sampler import (
     AsyncTimeline,
     ParticipationConfig,
@@ -194,7 +198,9 @@ class SyncAggregator(Aggregator):
         shard_clients: Optional[Callable] = None,
         fused_server: bool = False,
         donate: bool = True,
+        tracer=None,
     ):
+        self.tracer = get_tracer(tracer)
         if partial_progress or pcfg.partial_progress:
             # the aggregator owns the policy: it teaches the participation
             # layer the round's τ so plan_round can derive per-client τ_i
@@ -272,6 +278,11 @@ class SyncAggregator(Aggregator):
     def run_round(self, batches, plan: ParticipationPlan) -> Dict[str, jax.Array]:
         """One full round under this aggregator's policies; advances the
         owned state and returns the jitted round's metrics."""
+        t = self.tracer
+        if t.enabled:
+            rid = int(self.state["round"])
+            t.begin("round", span_id=f"r{rid}", round=rid,
+                    effective_k=float(plan.effective_k), track=0)
         w = jnp.asarray(self.round_weights(plan))
         sel = jnp.asarray(plan.selected)
         if self.partial_progress:
@@ -279,6 +290,13 @@ class SyncAggregator(Aggregator):
             self.state, metrics = self._round_fn(self.state, batches, w, sel, tau)
         else:
             self.state, metrics = self._round_fn(self.state, batches, w, sel)
+        if t.enabled:
+            attrs = trace_attrs(metrics)  # the one device sync tracing pays
+            t.end(f"r{rid}", **attrs)
+            t.count("rounds")
+            t.gauge("round", rid + 1)
+            for k, v in attrs.items():
+                t.gauge(k, v)
         return metrics
 
     # --- (c) checkpoint schema -------------------------------------------
@@ -348,6 +366,7 @@ class AsyncBufferAggregator(Aggregator):
         codec: Optional[Codec] = None,
         dispatch: Optional[Dict[str, Any]] = None,
         fused_server: bool = False,
+        tracer=None,
     ):
         self.fed = fed
         self.acfg = acfg
@@ -355,6 +374,7 @@ class AsyncBufferAggregator(Aggregator):
         self.codec = codec
         self.seed = seed
         self.fused_server = fused_server
+        self.tracer = get_tracer(tracer)
         if pcfg.partial_progress and pcfg.local_steps != fed.local_steps:
             raise ValueError(
                 "pcfg.local_steps must equal fed.local_steps under partial "
@@ -458,6 +478,12 @@ class AsyncBufferAggregator(Aggregator):
         self._losses: List[float] = []  # client train losses since last flush
         self._staleness: List[float] = []  # admitted staleness since last flush
         self._res_norms: List[float] = []  # EF residual norms since last flush
+        # the server-side round span: dispatch spans of version v parent into
+        # "u{v}"; _flush_row rotates it when a flush bumps the version
+        self._round_span = f"u{int(self.state['round'])}" if self.tracer.enabled else None
+        if self.tracer.enabled:
+            self.tracer.begin("round", span_id=self._round_span,
+                              round=int(self.state["round"]), track=0)
         if dispatch is not None:
             self._restore_dispatch(dispatch, inflight)
         else:
@@ -490,6 +516,49 @@ class AsyncBufferAggregator(Aggregator):
             self._heap, (self.sim_time + ev.duration, ev.index, ev, snapshot, version)
         )
         self._on_dispatch(ev, snapshot, version)
+        self._trace_dispatch(ev, version)
+
+    # --- telemetry (read-only: never touches the aggregation math) ---------
+    def _trace_dispatch(self, ev, version: int) -> None:
+        """Open the dispatch span ``d{index}`` under the round span of the
+        version its params snapshot was taken at. One display track per
+        population client so concurrent slots render as parallel bars."""
+        if not self.tracer.enabled:
+            return
+        self.tracer.begin(
+            "dispatch", span_id=f"d{ev.index}", parent=f"u{version}",
+            index=ev.index, client=int(ev.client), version=version,
+            completes=bool(ev.completes), track=1 + int(ev.client),
+        )
+        self.tracer.count("dispatches")
+
+    def _trace_complete(self, ev, outcome: str, staleness=None) -> None:
+        """Close a dispatch span with its terminal outcome."""
+        if not self.tracer.enabled:
+            return
+        attrs: Dict[str, Any] = {"outcome": outcome}
+        if staleness is not None:
+            attrs["staleness"] = float(staleness)
+        self.tracer.end(f"d{ev.index}", **attrs)
+        self.tracer.count(f"outcome_{outcome}")
+
+    def _trace_admit(self, ev, metrics) -> Dict[str, Any]:
+        """Record one admission decision (instant + counters + histogram) and
+        return the host-side record; ``{}`` when tracing is off."""
+        if not self.tracer.enabled:
+            return {}
+        rec = admission_record(metrics)
+        self.tracer.point("admit", parent=f"d{ev.index}", index=ev.index,
+                          client=int(ev.client), **rec)
+        if rec["accepted"]:
+            self.tracer.count("admits")
+            observe_staleness(self.tracer, rec["staleness"])
+        else:
+            self.tracer.count("admit_rejects")
+        self.tracer.gauge(
+            "buffer_occupancy", rec.get("buf_count", 0.0) / self.acfg.buffer_size
+        )
+        return rec
 
     def _on_dispatch(self, ev, snapshot, version: int) -> None:
         """Hook fired once per dispatched slot — including replayed slots on
@@ -540,7 +609,7 @@ class AsyncBufferAggregator(Aggregator):
     def should_flush(self) -> bool:
         return int(self.state["buf_count"]) >= self.acfg.buffer_size
 
-    def _flush_row(self, flush_metrics) -> Dict[str, float]:
+    def _flush_row(self, flush_metrics, deadline: bool = False) -> Dict[str, float]:
         row = {k: float(v) for k, v in flush_metrics.items()}
         row["sim_time"] = self.sim_time
         row["train_loss_mean"] = (
@@ -553,7 +622,49 @@ class AsyncBufferAggregator(Aggregator):
                 sum(self._res_norms) / len(self._res_norms) if self._res_norms else 0.0
             )
         self._losses, self._staleness, self._res_norms = [], [], []
+        self._trace_flush(row, deadline)
         return row
+
+    def _trace_flush(self, row: Dict[str, Any], deadline: bool) -> None:
+        """Record a flush instant and rotate the round span when the flush
+        actually bumped the model version (an empty deadline flush does not)."""
+        t = self.tracer
+        if not t.enabled:
+            return
+        new_round = int(self.state["round"])
+        attrs = {
+            "round": new_round,
+            "deadline": deadline,
+            "sim_time": row["sim_time"],
+            "train_loss": row["train_loss_mean"],
+        }
+        for k in ("buffer_fill", "staleness_mean", "staleness_max"):
+            if k in row:
+                attrs[k] = row[k]
+        t.point("flush", parent=self._round_span, **attrs)
+        t.count("deadline_flushes" if deadline else "flushes")
+        if f"u{new_round}" != self._round_span:
+            t.end(self._round_span, **{k: v for k, v in attrs.items()
+                                       if k != "round"})
+            self._round_span = f"u{new_round}"
+            t.begin("round", span_id=self._round_span, round=new_round, track=0)
+        t.gauge("round", new_round)
+        t.gauge("sim_time", row["sim_time"])
+        t.gauge("train_loss", row["train_loss_mean"])
+        t.gauge("uplink_bytes_total", row["uplink_bytes_total"])
+        if "buffer_fill" in row:
+            t.gauge("last_flush_fill", row["buffer_fill"])
+
+    def finalize_trace(self) -> None:
+        """End-of-run span hygiene: K slots are by construction still in
+        flight when a run stops, and the current round span is open — close
+        them with the ``inflight_at_exit`` outcome so the report CLI's
+        "all spans closed" check distinguishes a clean exit from a leak."""
+        if not self.tracer.enabled:
+            return
+        for _, _, ev, _, _ in sorted(self._heap):
+            self._trace_complete(ev, "inflight_at_exit")
+        self.tracer.end(self._round_span)
 
     def force_flush(self) -> Optional[Dict[str, float]]:
         """Apply a final outer update from a partially filled buffer (end of
@@ -644,6 +755,7 @@ class AsyncBufferAggregator(Aggregator):
             )
             self._busy.add(ev.client)
             self._on_dispatch(ev, snapshot, int(slot["version"]))
+            self._trace_dispatch(ev, int(slot["version"]))
 
     @classmethod
     def checkpoint_template(
@@ -704,10 +816,12 @@ class AsyncFederationDriver(AsyncBufferAggregator):
         codec: Optional[Codec] = None,
         dispatch: Optional[Dict[str, Any]] = None,
         fused_server: bool = False,
+        tracer=None,
     ):
         super().__init__(
             fed, acfg, pcfg, seed=seed, params=params, rng=rng, state=state,
             codec=codec, dispatch=dispatch, fused_server=fused_server,
+            tracer=tracer,
         )
         self.make_batches = make_batches
         fed1 = replace(fed, clients_per_round=1, keep_inner_state=False)
@@ -749,6 +863,7 @@ class AsyncFederationDriver(AsyncBufferAggregator):
             batches = self.make_batches(ev.client)
             if rejected and self.residuals is None:
                 self.work_wasted += ev.duration
+                self._trace_complete(ev, "rejected_stale", staleness=staleness)
             else:
                 extra: Dict[str, Any] = {}
                 if self.codec is not None:
@@ -774,16 +889,22 @@ class AsyncFederationDriver(AsyncBufferAggregator):
                 delta = jax.tree_util.tree_map(lambda d: d[0], deltas)
                 self.uplink_bytes_total += self._bytes_per_upload
                 m = self.admit(delta, version, self.event_weight(ev))
+                rec = self._trace_admit(ev, m)
                 if float(m["accepted"]) > 0:
                     self.work_completed += ev.duration
                     self._staleness.append(float(m["staleness"]))
                     self._losses.append(float(aux["step_metrics"]["loss"][-1]))
+                    self._trace_complete(ev, "admitted",
+                                         staleness=rec.get("staleness"))
                 else:  # rejected at admission: must not skew the flush row
                     self.work_wasted += ev.duration
+                    self._trace_complete(ev, "rejected",
+                                         staleness=rec.get("staleness"))
             if self.should_flush():
                 row = self._flush_row(self.flush())
         else:
             self.work_wasted += ev.duration
+            self._trace_complete(ev, "no_show")
         self._dispatch()
         return row
 

@@ -279,6 +279,25 @@ def admit_delta(
     return state, metrics
 
 
+def admission_record(metrics: Dict[str, jax.Array]) -> Dict[str, float]:
+    """Host-side view of one admission's outcome for telemetry/logging.
+
+    Converts exactly the scalars :func:`admit_delta` reports into plain floats
+    (one device sync, paid only when the caller is actually tracing) plus the
+    derived ``accepted`` bool — the record the tracer's ``admit`` instant and
+    the report CLI's staleness breakdown share. Deliberately read-only: the
+    admission math itself never changes whether this is called or not.
+    """
+    rec = {
+        "accepted": bool(float(metrics["accepted"]) > 0),
+        "staleness": float(metrics["staleness"]),
+        "discounted_weight": float(metrics["discounted_weight"]),
+    }
+    if "buf_count" in metrics:
+        rec["buf_count"] = float(metrics["buf_count"])
+    return rec
+
+
 def admit_deltas(
     fed: FederatedConfig,
     acfg: AsyncAggConfig,

@@ -449,6 +449,29 @@ def aggregation_metrics(
     }
 
 
+#: round metrics worth attaching to telemetry spans (the divergence
+#: leading-indicators, paper Figs 7/8) — a curated subset so span attrs stay
+#: small and schema-stable
+TRACE_METRIC_KEYS = (
+    "train_loss",
+    "pseudo_grad_norm",
+    "client_consensus",
+    "weight_entropy",
+    "effective_clients",
+    "model_norm",
+)
+
+
+def trace_attrs(metrics: Dict[str, Any], keys=TRACE_METRIC_KEYS) -> Dict[str, float]:
+    """Host-side float view of a round's telemetry-worthy metrics.
+
+    The device→host sync happens HERE, once, and only when a caller is
+    actually tracing — the jitted round itself never knows telemetry exists,
+    which is what keeps traced and untraced runs bitwise identical.
+    """
+    return {k: float(metrics[k]) for k in keys if k in metrics}
+
+
 def apply_aggregate(
     fed: FederatedConfig,
     state: Dict[str, Any],  # needs 'params', 'outer', 'round', 'rng'

@@ -90,7 +90,7 @@ def main() -> None:
                         tag += f"__{mode}"
                     if args.tag:
                         tag += f"__{args.tag}"
-                    t0 = time.time()
+                    t0 = time.perf_counter()
                     try:
                         kw = {}
                         if INPUT_SHAPES[shape_name].kind == "train":
@@ -122,7 +122,7 @@ def main() -> None:
                                 extra={"meta": step.meta, "arch": arch,
                                        "shape": shape_name, "multi_pod": multi_pod,
                                        "mode": mode or "serve",
-                                       "compile_s": time.time() - t0},
+                                       "compile_s": time.perf_counter() - t0},
                             )
                             print(
                                 "  roofline: compute=%.4fs memory=%.4fs collective=%.4fs -> %s"
@@ -137,7 +137,7 @@ def main() -> None:
                         print(f"FAIL  {tag}")
                         traceback.print_exc()
                     finally:
-                        print(f"  [{time.time() - t0:.1f}s]", flush=True)
+                        print(f"  [{time.perf_counter() - t0:.1f}s]", flush=True)
 
     print(f"\ndone; failures: {n_fail}")
     if n_fail:

@@ -80,9 +80,9 @@ def main() -> None:
         audio = jnp.asarray(
             rng.randn(args.batch, cfg.n_audio_frames, cfg.d_model), jnp.float32
         )
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = generate(model, params, prompt, args.gen, audio_embed=audio)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     print("sample:", np.asarray(out[0, -args.gen:]).tolist())

@@ -115,6 +115,7 @@ from repro.metrics import (
     wallclock_speedup,
 )
 from repro.models import build_model
+from repro.obs import JsonlSink, MetricsServer, Tracer
 from repro.runtime import ChaosConfig, ClientWorker, FederationDriver, SocketBackend
 
 
@@ -124,6 +125,24 @@ def _chaos_from_args(args):
         seed=args.chaos_seed,
     )
     return chaos if chaos.active else None
+
+
+def _build_tracer(args, proc):
+    """One tracer per process: events go to ``--trace`` (JSONL), counters feed
+    ``--metrics-port``. Returns None when neither flag is set — every
+    instrumented seam then sees the zero-overhead NULL_TRACER."""
+    if args.trace is None and args.metrics_port is None:
+        return None
+    sink = JsonlSink(args.trace) if args.trace else None
+    return Tracer(sink=sink, proc=proc, trace_id=f"seed{args.seed}")
+
+
+def _start_metrics(args, tracer, extra=None):
+    if tracer is None or args.metrics_port is None:
+        return None
+    srv = MetricsServer(tracer, port=args.metrics_port, extra=extra)
+    print(f"metrics serving on {srv.host}:{srv.port}", flush=True)
+    return srv
 
 
 def parse_args(argv=None):
@@ -236,6 +255,16 @@ def parse_args(argv=None):
     ap.add_argument("--chaos-kill", type=float, default=0.0,
                     help="fault injection: P(process hard-exits before a send)")
     ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="append structured trace events to this JSONL file "
+                         "(docs/observability.md); under --runtime sockets "
+                         "give each process its own path, then merge with "
+                         "python -m repro.obs.report. Tracing never changes "
+                         "aggregation results (bitwise, tested)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve a Prometheus-style text endpoint on "
+                         "127.0.0.1:PORT/metrics (0 = pick a free port, "
+                         "printed at startup)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log", default=None)
@@ -326,11 +355,14 @@ def run(args, cfg=None) -> dict:
     # and (c) the checkpoint schema. Weights, cohort ids and the τ-mask enter
     # the jitted round as traced arguments: per-round participation changes
     # (dropouts, stragglers, K_eff < K, realized τ_i) never trigger a recompile.
+    tracer = _build_tracer(args, "server")
     agg = SyncAggregator(
         loss_fn, fed, pcfg, codec=codec, seed=args.seed,
         partial_progress=args.partial_progress, fused_server=args.fused_server,
         params=params, rng=jax.random.PRNGKey(args.seed + 1),
+        tracer=tracer,
     )
+    metrics_srv = _start_metrics(args, tracer)
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     start_round = 0
@@ -392,8 +424,25 @@ def run(args, cfg=None) -> dict:
     logger = MetricLogger(args.log) if args.log else None
 
     history = []
+    try:
+        _run_sync_rounds(
+            args, model, agg, streams, val_stream, ckpt, logger, history,
+            start_round, params, codec,
+        )
+    finally:
+        if metrics_srv is not None:
+            metrics_srv.close()
+        if tracer is not None:
+            tracer.close()
+
+    return {"history": history, "state": agg.state, "model": model, "config": cfg,
+            "aggregator": agg}
+
+
+def _run_sync_rounds(args, model, agg, streams, val_stream, ckpt, logger,
+                     history, start_round, params, codec):
     for rnd in range(start_round, args.rounds):
-        t0 = time.time()
+        t0 = time.perf_counter()  # monotonic: durations, never wall timestamps
         plan = agg.plan(rnd)
         sel = plan.selected
         batches_np = round_batches([streams[i] for i in sel], args.local_steps, args.batch)
@@ -404,7 +453,7 @@ def run(args, cfg=None) -> dict:
             round=rnd,
             selected=",".join(map(str, sel)),  # slot ids, incl. zero-weight padding
             contributors=",".join(map(str, sel[plan.mask])),  # actually aggregated
-            seconds=time.time() - t0,
+            seconds=time.perf_counter() - t0,
             train_ppl=perplexity(metrics["train_loss"]),
             **participation_metrics(plan),
             **partial_progress_metrics(plan, args.local_steps),
@@ -444,9 +493,6 @@ def run(args, cfg=None) -> dict:
             for i in range(args.population):
                 ckpt.save_client(rnd, i, streams[i].state_dict())
 
-    return {"history": history, "state": agg.state, "model": model, "config": cfg,
-            "aggregator": agg}
-
 
 # args whose value changes the pure dispatch timeline, the data every client
 # draws, or the optimizer/buffer semantics: an async resume with any of these
@@ -478,15 +524,23 @@ def _run_worker(args, model, fed, pcfg, streams, codec=None) -> dict:
         pcfg = dataclasses.replace(
             pcfg, partial_progress=True, local_steps=args.local_steps
         )
+    tracer = _build_tracer(args, args.worker_id)
     worker = ClientWorker(
         lambda p, b: model.loss(p, b), fed, pcfg,
         streams=streams, batch_size=args.batch,
         host=args.host, port=args.port, codec=codec,
         name=args.worker_id, io_timeout=args.io_timeout,
-        chaos=_chaos_from_args(args),
+        chaos=_chaos_from_args(args), tracer=tracer,
     )
+    metrics_srv = _start_metrics(args, tracer)
     print(f"worker {args.worker_id} serving {args.host}:{args.port}")
-    n = worker.run()
+    try:
+        n = worker.run()
+    finally:
+        if metrics_srv is not None:
+            metrics_srv.close()
+        if tracer is not None:
+            tracer.close()
     print(f"worker {args.worker_id} done after {n} assignments")
     return {"completed": n}
 
@@ -578,6 +632,7 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
                   f"(dispatch cursor {dispatch['cursor']}, "
                   f"sim_time {dispatch['sim_time']:.2f})")
 
+    tracer = _build_tracer(args, "server")
     backend = None
     if args.runtime == "sockets":
         # the server owns every population client's data cursor: it ships the
@@ -589,22 +644,26 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
             host=args.host, port=args.port,
             stream_states=[s.state_dict() for s in streams],
             lease_timeout=args.lease_timeout, io_timeout=args.io_timeout,
-            chaos=_chaos_from_args(args),
+            chaos=_chaos_from_args(args), tracer=tracer,
         )
         print(f"server listening on {backend.host}:{backend.port}", flush=True)
         driver = FederationDriver(
             backend, fed, acfg, pcfg, flush_deadline=args.flush_deadline,
             seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
             codec=codec, state=state, dispatch=dispatch,
-            fused_server=args.fused_server,
+            fused_server=args.fused_server, tracer=tracer,
         )
     else:
         driver = AsyncFederationDriver(
             loss_fn, fed, acfg, pcfg, make_batches,
             seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
             codec=codec, state=state, dispatch=dispatch,
-            fused_server=args.fused_server,
+            fused_server=args.fused_server, tracer=tracer,
         )
+    metrics_srv = _start_metrics(
+        args, tracer,
+        extra=(backend.worker_liveness if backend is not None else None),
+    )
 
     # reference: what the deadline-masking sync schedule pays to aggregate the
     # same number of client deltas (cached cumulative replay of plan_round)
@@ -619,7 +678,7 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
 
     history = []
     deltas_admitted = [deltas_resumed]
-    t_wall = [time.time()]
+    t_wall = [time.perf_counter()]  # monotonic: row["seconds"] is a duration
 
     def on_update(i, row):
         u = start_update + i  # absolute outer-update index across resumes
@@ -647,11 +706,11 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
             ),
             work_completed=driver.work_completed,
             work_wasted=driver.work_wasted,
-            seconds=time.time() - t_wall[0],
+            seconds=time.perf_counter() - t_wall[0],
             train_loss=row["train_loss_mean"],
             train_ppl=perplexity(row["train_loss_mean"]),
         )
-        t_wall[0] = time.time()
+        t_wall[0] = time.perf_counter()
         row["val_ppl"] = evaluate_perplexity(
             model, driver.state["params"], val_stream,
             batches=args.eval_batches, batch_size=args.batch,
@@ -697,8 +756,13 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
             print(f"nothing to do: checkpoint already at update {start_update - 1} "
                   f"of {args.rounds}")
     finally:
+        driver.finalize_trace()  # close in-flight dispatch spans (no-op untraced)
         if backend is not None:
             backend.close(linger=1.0)  # let workers pull the "done" answer
+        if metrics_srv is not None:
+            metrics_srv.close()
+        if tracer is not None:
+            tracer.close()
     return {"history": history, "state": driver.state, "model": model,
             "config": cfg, "driver": driver}
 

@@ -3,6 +3,7 @@ leading-indicators), perplexity evaluation, and a lightweight CSV metric logger.
 from __future__ import annotations
 
 import csv
+import io
 import math
 import os
 from typing import Dict, Iterable, List, Optional
@@ -188,22 +189,64 @@ def activation_l2_probe(model, params, batch) -> float:
 
 
 class MetricLogger:
-    """Append-only CSV logger, one row per round/step."""
+    """Append-only CSV logger, one row per round/step.
+
+    Schema growth is handled, not swallowed: the first ``log`` fixes the
+    header, and a later row introducing NEW keys (e.g. ``val_ppl`` appearing
+    only on eval rounds) atomically rewrites the file with the widened header
+    — earlier rows pad the new columns with ``""``. The old behaviour
+    (``extrasaction="ignore"``) silently discarded such keys forever;
+    ``extrasaction="raise"`` now backstops the union logic so a dropped field
+    can only ever be a loud error, never lost data.
+    """
 
     def __init__(self, path: str, fieldnames: Optional[List[str]] = None):
         self.path = path
-        self.fieldnames = fieldnames
+        self.fieldnames = list(fieldnames) if fieldnames else None
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self._initialized = os.path.exists(path)
+        if self._initialized:
+            # resuming into an existing file: adopt (and union with) its header
+            with open(self.path, newline="") as f:
+                existing = next(csv.reader(f), None)
+            if existing:
+                merged = list(existing)
+                merged += [c for c in (self.fieldnames or []) if c not in merged]
+                self.fieldnames = merged
+
+    def _grow_schema(self, new_keys: List[str]) -> None:
+        """Widen the header in place: atomic whole-file rewrite (checkpoint
+        module's tmp+fsync+replace pattern), old rows padded with ''."""
+        from repro.checkpoint.checkpoint import _atomic_write
+
+        old_rows = self.read() if self._initialized else []
+        self.fieldnames = list(self.fieldnames or []) + list(new_keys)
+
+        buf = io.StringIO(newline="")
+        w = csv.DictWriter(
+            buf, fieldnames=self.fieldnames, extrasaction="raise", restval=""
+        )
+        w.writeheader()
+        for r in old_rows:
+            w.writerow(r)
+        _atomic_write(self.path, lambda f: f.write(buf.getvalue().encode("utf-8")))
+        self._initialized = True
 
     def log(self, row: Dict) -> None:
         row = {k: (float(v) if hasattr(v, "item") or isinstance(v, (int, float)) else v)
                for k, v in row.items()}
         if self.fieldnames is None:
             self.fieldnames = list(row.keys())
+        new_keys = [k for k in row if k not in self.fieldnames]
+        if new_keys and self._initialized:
+            self._grow_schema(new_keys)
+        elif new_keys:
+            self.fieldnames += new_keys
         write_header = not self._initialized
         with open(self.path, "a", newline="") as f:
-            w = csv.DictWriter(f, fieldnames=self.fieldnames, extrasaction="ignore")
+            w = csv.DictWriter(
+                f, fieldnames=self.fieldnames, extrasaction="raise", restval=""
+            )
             if write_header:
                 w.writeheader()
             w.writerow(row)

@@ -41,12 +41,27 @@ KILL_EXIT_CODE = 137  # what SIGKILL would report — supervisors respawn on it
 
 
 class ChaosMonkey:
-    """One die roll per outbound message; at most one fault fires."""
+    """One die roll per outbound message; at most one fault fires.
 
-    def __init__(self, cfg: ChaosConfig, role: str):
+    When a tracer is attached, every injected fault lands in the event log as
+    a ``fault`` instant — the audit the report CLI cross-checks against. For a
+    *kill* the tracer is flushed to disk BEFORE ``os._exit`` (which skips all
+    atexit/buffer teardown), so the fault that explains a half-open span
+    always survives the crash it causes.
+    """
+
+    def __init__(self, cfg: ChaosConfig, role: str, tracer=None):
         self.cfg = cfg
         self.role = role
+        self.tracer = tracer
         self._rng = random.Random(f"{cfg.seed}:{role}")
+
+    def _fault(self, kind: str) -> None:
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.point("fault", kind=kind, role=self.role)
+            self.tracer.count(f"chaos_{kind}")
+            if kind == "kill":
+                self.tracer.flush()
 
     def on_send(self) -> bool:
         """Roll before a send. Returns True when the message must be DROPPED.
@@ -56,13 +71,16 @@ class ChaosMonkey:
         r = self._rng.random()
         if r < self.cfg.kill:
             print(f"[chaos:{self.role}] killed before send", file=sys.stderr, flush=True)
+            self._fault("kill")
             os._exit(KILL_EXIT_CODE)
         r -= self.cfg.kill
         if r < self.cfg.drop:
+            self._fault("drop")
             return True
         r -= self.cfg.drop
         if r < self.cfg.delay:
             import time
 
+            self._fault("delay")
             time.sleep(self.cfg.delay_s)
         return False

@@ -232,9 +232,15 @@ class FederationDriver(AsyncBufferAggregator):
                 # With an empty buffer the flush is a core-state no-op, so a
                 # quiet network cannot spuriously decay the outer optimizer.
                 if int(self.state["buf_count"]) > 0:
-                    rows.append(self._flush_row(self.flush()))
+                    rows.append(self._flush_row(self.flush(), deadline=True))
                 else:
                     self.flush()
+                    if self.tracer.enabled:
+                        self.tracer.point(
+                            "deadline_flush_empty", parent=self._round_span,
+                            stalled_index=index,
+                        )
+                        self.tracer.count("deadline_flushes_empty")
 
     def step(self) -> List[Dict[str, float]]:
         """Advance by one completion event; returns this step's flush rows
@@ -250,6 +256,7 @@ class FederationDriver(AsyncBufferAggregator):
             res = self._await_result(ev.index, rows)
             if rejected and self.residuals is None:
                 self.work_wasted += ev.duration
+                self._trace_complete(ev, "rejected_stale", staleness=staleness)
             else:
                 if self.residuals is not None:
                     cid = jnp.asarray(ev.client, jnp.int32)
@@ -261,17 +268,23 @@ class FederationDriver(AsyncBufferAggregator):
                 payload = jax.tree_util.tree_map(jnp.asarray, res.payload)
                 self.uplink_bytes_total += self._bytes_per_upload
                 m = self.admit(payload, version, self.event_weight(ev))
+                rec = self._trace_admit(ev, m)
                 if float(m["accepted"]) > 0:
                     self.work_completed += ev.duration
                     self._staleness.append(float(m["staleness"]))
                     self._losses.append(res.loss)
+                    self._trace_complete(ev, "admitted",
+                                         staleness=rec.get("staleness"))
                 else:  # rejected at admission: must not skew the flush row
                     self.work_wasted += ev.duration
+                    self._trace_complete(ev, "rejected",
+                                         staleness=rec.get("staleness"))
             self.backend.commit(ev.index, res)
             if self.should_flush():
                 rows.append(self._flush_row(self.flush()))
         else:
             self.work_wasted += ev.duration
+            self._trace_complete(ev, "no_show")
         self._dispatch()
         return rows
 

@@ -43,9 +43,22 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.tracer import get_tracer
 from repro.runtime.chaos import ChaosConfig, ChaosMonkey
 from repro.runtime.driver import Assignment, ClientBackend, ClientResult
 from repro.runtime.transport import Message, TransportError, recv_msg, send_msg
+
+
+def _tree_leaves(tree):
+    """Yield the np-array leaves of a wire pytree (dict/list/tuple nesting)."""
+    if isinstance(tree, dict):
+        for v in tree.values():
+            yield from _tree_leaves(v)
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            yield from _tree_leaves(v)
+    else:
+        yield tree
 
 
 class SocketBackend(ClientBackend):
@@ -58,13 +71,23 @@ class SocketBackend(ClientBackend):
         lease_timeout: float = 30.0,
         io_timeout: float = 30.0,
         chaos: Optional[ChaosConfig] = None,
+        tracer=None,
     ):
         self.lease_timeout = lease_timeout
         self.io_timeout = io_timeout
         self.stream_states = stream_states  # index = population client id
+        self.tracer = get_tracer(tracer)
         self._monkey = (
-            ChaosMonkey(chaos, "server") if chaos is not None and chaos.active else None
+            ChaosMonkey(chaos, "server", tracer=self.tracer)
+            if chaos is not None and chaos.active
+            else None
         )
+        # wire truth for the byte-accounting parity test: bytes of accepted
+        # (non-duplicate) push payload blobs, and per-worker last-seen clocks
+        # for the liveness gauge — plain host floats, safe to read from the
+        # metrics HTTP thread
+        self.payload_bytes_rx = 0.0
+        self._worker_seen: Dict[str, float] = {}
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._pending: Dict[int, Assignment] = {}  # index → live assignment
@@ -152,13 +175,14 @@ class SocketBackend(ClientBackend):
     def _serve(self, conn: socket.socket) -> None:
         try:
             while not self._stop.is_set():
-                msg = recv_msg(conn)
+                msg = recv_msg(conn, tracer=self.tracer)
                 if msg.type == "pull":
                     self._handle_pull(conn, msg)
                 elif msg.type == "push":
                     self._handle_push(conn, msg)
                 else:
-                    send_msg(conn, "error", {"reason": f"unknown type {msg.type}"})
+                    send_msg(conn, "error", {"reason": f"unknown type {msg.type}"},
+                             tracer=self.tracer)
         except (TransportError, OSError):
             pass  # worker went away; its leases expire and redispatch
         finally:
@@ -176,40 +200,58 @@ class SocketBackend(ClientBackend):
                 lease = self._leases.get(index)
                 if lease is not None and lease[0] > now and lease[1] != worker:
                     continue  # actively leased to someone else
+                regrant = lease is not None
+                expired = regrant and lease[0] <= now
                 self._leases[index] = (now + self.lease_timeout, worker)
+                if self.tracer.enabled:
+                    self.tracer.point(
+                        "lease_grant", parent=f"d{index}", index=index,
+                        worker=worker, regrant=regrant, expired=expired,
+                    )
+                    self.tracer.count("lease_grants")
+                    if expired:
+                        self.tracer.count("lease_expiries")
+                        self.tracer.count("redispatches")
+                    elif regrant:
+                        self.tracer.count("lease_regrants")
                 return self._pending[index]
         return None
 
     def _handle_pull(self, conn: socket.socket, msg: Message) -> None:
         worker = str(msg.meta.get("worker", "?"))
+        self._worker_seen[worker] = time.monotonic()
+        self.tracer.count("pulls")
         if self._done:
-            send_msg(conn, "done", chaos=self._monkey)
+            send_msg(conn, "done", chaos=self._monkey, tracer=self.tracer)
             return
         a = self._grant(worker)
         if a is None:
-            send_msg(conn, "wait", chaos=self._monkey)
+            self.tracer.count("pull_waits")
+            send_msg(conn, "wait", chaos=self._monkey, tracer=self.tracer)
             return
+        meta = {
+            "index": a.index,
+            "client": a.client,
+            "version": a.version,
+            "local_steps": a.local_steps,
+            "stream_state": a.stream_state,
+        }
+        if self.tracer.enabled:
+            # cross-process propagation: the worker parents its assignment
+            # span into this dispatch's span via the frame header
+            meta["trace"] = {"t": self.tracer.trace_id, "s": f"d{a.index}"}
         trees = {"params": a.params}
         if a.residual is not None:
             trees["residual"] = a.residual
         if a.rng is not None:
             trees["rng"] = a.rng
-        send_msg(
-            conn,
-            "work",
-            meta={
-                "index": a.index,
-                "client": a.client,
-                "version": a.version,
-                "local_steps": a.local_steps,
-                "stream_state": a.stream_state,
-            },
-            trees=trees,
-            chaos=self._monkey,
-        )
+        send_msg(conn, "work", meta=meta, trees=trees,
+                 chaos=self._monkey, tracer=self.tracer)
 
     def _handle_push(self, conn: socket.socket, msg: Message) -> None:
         index = int(msg.meta["index"])
+        worker = str(msg.meta.get("worker", "?"))
+        self._worker_seen[worker] = time.monotonic()
         result = ClientResult(
             index=index,
             client=int(msg.meta["client"]),
@@ -222,10 +264,39 @@ class SocketBackend(ClientBackend):
             # first result wins; duplicates (lease races, re-pushed after a
             # dropped ack) are acked and discarded — results are identical
             # anyway because assignments are pure
-            if index in self._pending and index not in self._results:
+            accepted = index in self._pending and index not in self._results
+            if accepted:
                 self._results[index] = result
                 self._cv.notify_all()
-        send_msg(conn, "ack", {"index": index}, chaos=self._monkey)
+        if self.tracer.enabled:
+            self.tracer.point("push_recv", parent=f"d{index}", index=index,
+                              worker=worker, dup=not accepted)
+            self.tracer.count("pushes")
+            if accepted:
+                if result.payload is not None:
+                    nbytes = float(sum(
+                        np.asarray(leaf).nbytes
+                        for leaf in _tree_leaves(result.payload)
+                    ))
+                    self.payload_bytes_rx += nbytes
+                    self.tracer.count("payload_bytes_rx", nbytes)
+            else:
+                self.tracer.count("dedup_drops")
+        send_msg(conn, "ack", {"index": index}, chaos=self._monkey,
+                 tracer=self.tracer)
+
+    # --- liveness ---------------------------------------------------------
+    def worker_liveness(self, window: float = 15.0) -> Dict[str, float]:
+        """Metrics-endpoint extras: workers seen within ``window`` seconds +
+        total distinct workers ever seen. Plain floats only (HTTP thread)."""
+        now = time.monotonic()
+        seen = dict(self._worker_seen)
+        return {
+            "workers_alive": float(
+                sum(1 for t in seen.values() if now - t <= window)
+            ),
+            "workers_seen": float(len(seen)),
+        }
 
     # --- checkpoint support ----------------------------------------------
     def snapshot_stream_states(self) -> Optional[List[Dict[str, Any]]]:

@@ -198,18 +198,33 @@ def send_msg(
     meta: Optional[Dict[str, Any]] = None,
     trees: Optional[Dict[str, Any]] = None,
     chaos=None,
+    tracer=None,
 ) -> bool:
     """Send one message; returns False when chaos injection dropped it (the
     peer sees nothing and must recover via its own timeout). A chaos *kill*
-    never returns at all."""
+    never returns at all.
+
+    ``tracer`` counts wire truth — actual frame bytes handed to the socket
+    (payload + the 8-byte length prefix), counted only for messages that
+    really go out: the chaos roll happens first, so dropped/killed sends never
+    inflate ``bytes_tx``.
+    """
     if chaos is not None and chaos.on_send():
         return False
-    send_frame(sock, encode_msg(mtype, meta, trees))
+    payload = encode_msg(mtype, meta, trees)
+    send_frame(sock, payload)
+    if tracer is not None and tracer.enabled:
+        tracer.count("bytes_tx", len(payload) + _LEN.size)
+        tracer.count("msgs_tx")
     return True
 
 
-def recv_msg(sock: socket.socket) -> Message:
-    return decode_msg(recv_frame(sock))
+def recv_msg(sock: socket.socket, tracer=None) -> Message:
+    payload = recv_frame(sock)
+    if tracer is not None and tracer.enabled:
+        tracer.count("bytes_rx", len(payload) + _LEN.size)
+        tracer.count("msgs_rx")
+    return decode_msg(payload)
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from repro.core.compression import Codec
 from repro.core.federated import FederatedConfig
 from repro.core.sampler import ParticipationConfig
+from repro.obs.tracer import get_tracer
 from repro.runtime.chaos import ChaosConfig, ChaosMonkey
 from repro.runtime.driver import build_client_phase
 from repro.runtime.transport import (
@@ -66,6 +67,7 @@ class ClientWorker:
         poll_interval: float = 0.05,
         backoff: Optional[Backoff] = None,
         chaos: Optional[ChaosConfig] = None,
+        tracer=None,
     ):
         if (streams is None) == (make_batches is None):
             raise ValueError("pass exactly one of streams= or make_batches=")
@@ -82,8 +84,11 @@ class ClientWorker:
         self._codec = codec
         self._partial = pcfg.partial_progress
         self._client_fn = build_client_phase(loss_fn, fed, codec, pcfg.partial_progress)
+        self.tracer = get_tracer(tracer)
         self._monkey = (
-            ChaosMonkey(chaos, name) if chaos is not None and chaos.active else None
+            ChaosMonkey(chaos, name, tracer=self.tracer)
+            if chaos is not None and chaos.active
+            else None
         )
         self._sock: Optional[socket.socket] = None
 
@@ -104,9 +109,10 @@ class ClientWorker:
             try:
                 if self._sock is None:
                     self._sock = connect(self.host, self.port, self.io_timeout)
-                if not send_msg(self._sock, mtype, meta, trees, chaos=self._monkey):
+                if not send_msg(self._sock, mtype, meta, trees,
+                                chaos=self._monkey, tracer=self.tracer):
                     raise _Dropped("chaos dropped our frame")
-                reply = recv_msg(self._sock)
+                reply = recv_msg(self._sock, tracer=self.tracer)
                 self.backoff.reset()
                 return reply
             except (TransportError, OSError) as e:
@@ -129,12 +135,30 @@ class ClientWorker:
                 continue
             if reply.type != "work":
                 continue
-            meta, trees = self._execute(reply)
+            index = int(reply.meta["index"])
+            # parent into the server's dispatch span via the wire-propagated
+            # trace context (fall back to the deterministic id when the
+            # server runs untraced — span ids need no handshake)
+            wire_trace = reply.meta.get("trace") or {}
+            parent = wire_trace.get("s", f"d{index}")
+            sid = f"d{index}@{self.name}"
+            self.tracer.begin(
+                "assignment", span_id=sid, parent=parent, index=index,
+                client=int(reply.meta["client"]),
+                version=int(reply.meta["version"]),
+            )
+            with self.tracer.span("train", span_id=f"{sid}/t", parent=sid):
+                meta, trees = self._execute(reply)
+            self.tracer.begin("push", span_id=f"{sid}/p", parent=sid)
             ack = self._rpc("push", meta, trees)
+            self.tracer.end(f"{sid}/p", ok=ack is not None)
+            self.tracer.end(sid, outcome="pushed" if ack is not None else "gave_up")
+            self.tracer.count("assignments")
             if ack is None:
                 break
             done += 1
         self._close()
+        self.tracer.flush()
         return done
 
     def _draw(self, cid: int, stream_state):
@@ -179,6 +203,7 @@ class ClientWorker:
             "client": cid,
             "loss": float(aux["step_metrics"]["loss"][-1]),
             "stream_state": new_cursor,
+            "worker": self.name,
         }
         out_trees: Dict[str, Any] = {"payload": payload}
         if self._stateful:
