@@ -14,6 +14,7 @@ import time
 import traceback
 
 from benchmarks import (
+    bench_adaptive_control,
     bench_async_vs_sync,
     bench_communication,
     bench_compressed_uplink,
@@ -36,6 +37,7 @@ BENCHES = [
     ("heterogeneity", bench_heterogeneity),  # Fig 4/5, C3
     ("partial_participation", bench_partial_participation),  # Fig 6, C4
     ("async_vs_sync", bench_async_vs_sync),  # FedBuff buffer vs deadline masking
+    ("adaptive_control", bench_adaptive_control),  # closed-loop knob tuning
     ("outer_optimizers", bench_outer_optimizers),  # Fig 10, C5
     ("norm_dynamics", bench_norm_dynamics),  # Fig 7/8, C6
     ("eval_harness", bench_eval_harness),  # Tables 5/6 proxy

@@ -22,12 +22,21 @@ id across interleaved completions and buffer flushes.
 (the ``core/aggregator`` seam): a slow institution contributes the τ_i steps it
 actually finished, down-weighted by τ_i/τ, instead of losing its whole round.
 
+``--control`` closes the loop between the observed telemetry and the knobs
+(``repro.control``, docs/control.md): ``staleness`` (async) governs the buffer
+size and staleness discount toward a ``--control-target`` admitted-staleness
+quantile; ``cohort`` (sync) tunes the straggler deadline from the effective-K
+fraction. Applied knob updates print per round and, with ``--trace``, land as
+``knob_update`` events (with evidence) in the JSONL.
+
   PYTHONPATH=src python examples/heterogeneous_federation.py
   PYTHONPATH=src python examples/heterogeneous_federation.py --aggregation async --rounds 2
   PYTHONPATH=src python examples/heterogeneous_federation.py --aggregation async \
       --uplink topk --rounds 2
   PYTHONPATH=src python examples/heterogeneous_federation.py --partial-progress \
       --straggler-profile heavy --rounds 2
+  PYTHONPATH=src python examples/heterogeneous_federation.py --aggregation async \
+      --control staleness --control-target 3 --rounds 2 --trace /tmp/hetero.jsonl
 """
 import argparse
 
@@ -35,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.control import CohortTuner, FederationController, StalenessGovernor
 from repro.core import (
     STRAGGLER_PROFILES,
     UPLINK_SCHEMES,
@@ -49,8 +59,9 @@ from repro.core import (
     uplink_bytes,
 )
 from repro.data import PILE_CATEGORIES, build_client_streams, round_batches, validation_stream
-from repro.metrics import evaluate_perplexity, partial_progress_metrics
+from repro.metrics import evaluate_perplexity, participation_metrics, partial_progress_metrics
 from repro.models import build_model
+from repro.obs import JsonlSink, Tracer
 
 TAU, CLIENTS, BATCH, SEQ, SEED = 8, 8, 2, 64, 0
 
@@ -72,7 +83,45 @@ def parse_args():
     ap.add_argument("--partial-progress", action="store_true",
                     help="credit stragglers their realized τ_i steps at weight "
                          "τ_i/τ instead of cutting them at the deadline")
+    ap.add_argument("--control", default="static",
+                    choices=["static", "staleness", "cohort"],
+                    help="closed-loop knob control (docs/control.md): "
+                         "staleness needs --aggregation async, cohort sync")
+    ap.add_argument("--control-target", type=float, default=None,
+                    help="policy setpoint: staleness-quantile value (async) "
+                         "or effective-K fraction (sync)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="append structured events (incl. knob_update) to "
+                         "this JSONL file")
     return ap.parse_args()
+
+
+def build_controller(args):
+    """``--control`` → controller (or None). Mirrors train.py's pairing rules
+    at example scale: the governor owns async knobs, the tuner sync ones."""
+    if args.control == "static":
+        return None
+    if args.control == "staleness":
+        if args.aggregation != "async":
+            raise SystemExit("--control staleness requires --aggregation async")
+        policy = StalenessGovernor(
+            staleness_alpha=args.staleness_alpha,
+            buffer_size=args.buffer_size,
+            target=args.control_target if args.control_target is not None else 1.0,
+            buffer_max=max(args.buffer_size, CLIENTS),
+        )
+    else:
+        if args.aggregation != "sync":
+            raise SystemExit("--control cohort requires --aggregation sync")
+        policy = CohortTuner(
+            clients_per_round=CLIENTS,
+            deadline=STRAGGLER_PROFILES[args.straggler_profile].deadline,
+            population=CLIENTS,
+            target=args.control_target if args.control_target is not None else 0.9,
+        )
+    # window=2: the example runs only a handful of updates, so decisions must
+    # fire off early evidence
+    return FederationController(policy, window=2)
 
 
 def main():
@@ -110,8 +159,18 @@ def main():
         get_codec(args.uplink, args.topk_fraction)
         if args.uplink != "float32" else None
     )
+    tracer = (
+        Tracer(sink=JsonlSink(args.trace), proc="example", trace_id="hetero")
+        if args.trace else None
+    )
+    controller = build_controller(args)
     if args.aggregation == "async":
-        run_async(args, cfg, model, fed, pcfg, streams, val, codec)
+        try:
+            run_async(args, cfg, model, fed, pcfg, streams, val, codec,
+                      tracer=tracer, controller=controller)
+        finally:
+            if tracer is not None:
+                tracer.close()
         return
 
     params = model.init(jax.random.PRNGKey(0))
@@ -122,7 +181,8 @@ def main():
     # the Aggregator seam owns admission (the plan's mask / partial τ_i), the
     # weight policy (n_k·τ_i/τ) and the checkpoint schema; the example only
     # moves batches
-    agg = SyncAggregator(model.loss, fed, pcfg, codec=codec, seed=SEED, params=params)
+    agg = SyncAggregator(model.loss, fed, pcfg, codec=codec, seed=SEED,
+                         params=params, tracer=tracer, controller=controller)
     for rnd in range(args.rounds):
         plan = agg.plan(rnd)
         # bind streams by the plan's slot ids so weights stay aligned with data
@@ -143,10 +203,23 @@ def main():
             f"stragglers={plan.n_stragglers} dropped={plan.n_dropped} "
             f"w_entropy={float(m['weight_entropy']):.2f}{partial}"
         )
+        # round-boundary control point: the cohort tuner may retune the
+        # deadline/cohort for the next round from this round's participation
+        update = agg.control_step({
+            **participation_metrics(plan),
+            **partial_progress_metrics(plan, TAU),
+        })
+        if update is not None:
+            print("  control: " + ", ".join(
+                f"{k}={v:g}" for k, v in update.knob_dict().items()
+            ))
+    if tracer is not None:
+        tracer.close()
     print("heterogeneous federation converged under churn (paper claims C3 + §7).")
 
 
-def run_async(args, cfg, model, fed, pcfg, streams, val, codec=None):
+def run_async(args, cfg, model, fed, pcfg, streams, val, codec=None,
+              tracer=None, controller=None):
     """The same federation, asynchronously: slow institutions finish late and are
     buffered with staleness discounts instead of being cut at the deadline."""
     acfg = AsyncAggConfig(
@@ -165,6 +238,7 @@ def run_async(args, cfg, model, fed, pcfg, streams, val, codec=None):
     driver = AsyncFederationDriver(
         model.loss, fed, acfg, pcfg, make_batches,
         seed=SEED, params=params, codec=codec,
+        tracer=tracer, controller=controller,
     )
 
     def on_update(i, row):
@@ -176,11 +250,18 @@ def run_async(args, cfg, model, fed, pcfg, streams, val, codec=None):
             f"consensus={row['client_consensus']:.3f} "
             f"pg_norm={row['pseudo_grad_norm']:.4f} "
             f"staleness={row['staleness_mean']:.2f}/{row['staleness_max']:.0f} "
-            f"buf={row['buffer_fill']:.0f}/{acfg.buffer_size} "
+            f"buf={row['buffer_fill']:.0f}/{driver.acfg.buffer_size} "
             f"t_sim={row['sim_time']:.2f}"
         )
+        knobs = {k[len("knob_"):]: v for k, v in row.items()
+                 if k.startswith("knob_")}
+        if knobs:
+            print("  control: " + ", ".join(
+                f"{k}={v:g}" for k, v in knobs.items()
+            ))
 
     driver.run_updates(args.rounds, on_update=on_update)
+    driver.finalize_trace()
     uplink = (
         f", uplink: {driver.uplink_bytes_total / 1e6:.1f} MB" if codec else ""
     )

@@ -1,7 +1,20 @@
 """Quickstart: federated pre-training of a tiny Photon model in ~a minute on CPU.
 
-Demonstrates the full public API surface: config -> model -> data sources ->
-federated rounds -> held-out evaluation.
+Demonstrates the smallest end-to-end loop: config -> model -> data sources ->
+synchronous federated rounds -> held-out evaluation. This is deliberately the
+BOTTOM of the stack (docs/architecture.md) — the pure jitted `federated_round`
+driven by hand. Everything layered above it is opt-in elsewhere:
+
+- `--aggregation {sync,async}` — deadline-cut rounds vs the FedBuff buffer
+  (examples/heterogeneous_federation.py, docs/aggregation.md)
+- `--uplink {float32,bf16,int8,topk}` — compressed pseudo-gradient uploads
+  with per-client error feedback (docs/uplink.md)
+- `--runtime {inproc,sockets}` — the same aggregator across real server/worker
+  processes (examples/socket_federation.py, docs/runtime.md)
+- `--control {static,staleness,cohort}` — closed-loop knob tuning from live
+  telemetry (docs/control.md)
+
+All four compose in `launch/train.py` (`--help` is the full flag reference).
 
   PYTHONPATH=src python examples/quickstart.py
 """

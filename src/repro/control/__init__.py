@@ -1,0 +1,18 @@
+"""Closed-loop aggregation control: telemetry in, knob updates out
+(docs/control.md)."""
+from repro.control.controller import (  # noqa: F401
+    CONTROL_KEYS,
+    FederationController,
+    build_controller,
+)
+from repro.control.policy import (  # noqa: F401
+    ALPHA_MAX,
+    ALPHA_STEP,
+    CONTROL_POLICIES,
+    CohortTuner,
+    ControlPolicy,
+    DEADLINE_STEP,
+    KnobUpdate,
+    StalenessGovernor,
+    StaticPolicy,
+)

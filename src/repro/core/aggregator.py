@@ -137,9 +137,51 @@ class Aggregator:
     """
 
     kind = "base"
+    #: optional :class:`repro.control.FederationController` closing the loop
+    #: between observed metrics and this aggregator's knobs; ``None`` (or a
+    #: static controller) keeps every code path bitwise the uncontrolled run
+    controller = None
 
     def checkpoint(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         raise NotImplementedError
+
+    # --- closed-loop control (docs/control.md) -----------------------------
+    def apply_knobs(self, update) -> None:
+        """Apply a :class:`~repro.control.KnobUpdate` to this aggregator's
+        configuration. Only ever called between jitted steps (a round/flush
+        boundary), so a knob change is a host-side config replace + jit
+        rebuild at the new bucketed shape — never a mid-graph mutation."""
+        raise NotImplementedError
+
+    def control_step(self, row: Dict[str, Any]):
+        """Feed one boundary metrics row to the attached controller and apply
+        whatever it returns. A no-op without an active controller — the
+        control seam costs the uncontrolled run nothing (bitwise, tested).
+        Returns the applied ``KnobUpdate`` or ``None``."""
+        c = self.controller
+        if c is None or not c.enabled:
+            return None
+        update = c.observe(row)
+        if update is None:
+            return None
+        self.apply_knobs(update)
+        self._trace_knob_update(update)
+        return update
+
+    def _trace_knob_update(self, update) -> None:
+        """Emit the applied update as an obs instant (with its evidence) and
+        refresh the ``control_*`` gauges the metrics endpoint exports."""
+        t = self.tracer
+        if not t.enabled:
+            return
+        attrs: Dict[str, Any] = {
+            f"knob_{k}": v for k, v in update.knob_dict().items()
+        }
+        attrs.update({f"evidence_{k}": v for k, v in update.evidence.items()})
+        t.point("knob_update", parent=getattr(self, "_round_span", None), **attrs)
+        t.count("knob_updates")
+        for k, v in self.controller.knobs().items():
+            t.gauge(f"control_{k}", float(v))
 
     @staticmethod
     def validate_manifest(manifest: Dict[str, Any], kind: str) -> None:
@@ -199,8 +241,10 @@ class SyncAggregator(Aggregator):
         fused_server: bool = False,
         donate: bool = True,
         tracer=None,
+        controller=None,
     ):
         self.tracer = get_tracer(tracer)
+        self.controller = controller
         if partial_progress or pcfg.partial_progress:
             # the aggregator owns the policy: it teaches the participation
             # layer the round's τ so plan_round can derive per-client τ_i
@@ -226,12 +270,26 @@ class SyncAggregator(Aggregator):
             from repro.kernels.fedcore import fused_apply_aggregate
 
             apply_fn = fused_apply_aggregate
+        self._loss_fn = loss_fn
+        self._shard_clients = shard_clients
+        self._apply_fn = apply_fn
+        self._build_round_fn()
+
+    def _build_round_fn(self) -> None:
+        """(Re)build the jitted round from the CURRENT ``self.fed``/codec.
+
+        Called at construction and again by :meth:`apply_knobs` when the
+        cohort-size knob changes: the round jit closes over ``fed`` (the
+        cohort broadcast width), so a new K needs a fresh closure — XLA then
+        retraces once at the new bucketed cohort shape."""
+        loss_fn, fed, codec = self._loss_fn, self.fed, self.codec
+        shard_clients, apply_fn = self._shard_clients, self._apply_fn
         # the aggregator exclusively owns its state pytree (params, outer
         # lanes, rng, the residual store — and the inner states under
         # keep_inner_state), and every round replaces it wholesale: donating it
         # lets XLA update the params-sized lanes in place instead of
         # double-buffering them (a no-op on backends without donation support)
-        donate_kw = {"donate_argnums": (0,)} if donate else {}
+        donate_kw = {"donate_argnums": (0,)} if self.donate else {}
         if self.partial_progress:
             self._round_fn = jax.jit(
                 lambda s, b, w, sel, tau: federated_round_with_uplink(
@@ -248,6 +306,37 @@ class SyncAggregator(Aggregator):
                 ),
                 **donate_kw,
             )
+
+    def apply_knobs(self, update) -> None:
+        """Apply a sync :class:`KnobUpdate` between rounds.
+
+        The deadline is a host-side planning scalar (free); a new
+        ``clients_per_round`` changes the cohort broadcast width, so both the
+        participation config and the federated config move together and the
+        round jit is rebuilt (one retrace per bucketed K)."""
+        if update.staleness_alpha is not None or update.buffer_size is not None:
+            raise ValueError(
+                "sync aggregator has no async knobs (staleness_alpha/"
+                "buffer_size belong to --aggregation async)"
+            )
+        if update.deadline is not None:
+            self.pcfg = replace(
+                self.pcfg,
+                straggler=replace(
+                    self.pcfg.straggler, deadline=float(update.deadline)
+                ),
+            )
+        if update.clients_per_round is not None:
+            k = int(update.clients_per_round)
+            if self.fed.keep_inner_state:
+                raise ValueError(
+                    "cohort control cannot resize the keep_inner_state lanes "
+                    "(the persisted inner optimizer state is (K, ...)-shaped) "
+                    "— drop --keep-opt or use --control static"
+                )
+            self.pcfg = replace(self.pcfg, clients_per_round=k)
+            self.fed = replace(self.fed, clients_per_round=k)
+            self._build_round_fn()
 
     # --- (a) admission ---------------------------------------------------
     def plan(self, round_idx: int) -> ParticipationPlan:
@@ -304,9 +393,13 @@ class SyncAggregator(Aggregator):
         # a COPY, not the live state: the round jit donates self.state, so a
         # caller that serializes the checkpoint after the next round would
         # otherwise hold deleted arrays
-        return _own(self.state), dict(
-            self._manifest_header(), round=int(self.state["round"])
-        )
+        manifest = dict(self._manifest_header(), round=int(self.state["round"]))
+        if self.controller is not None and self.controller.enabled:
+            # controller state rides the manifest (JSON floats round-trip
+            # exactly); absent entirely for static/None, keeping the default
+            # checkpoint byte-identical to the uncontrolled schema
+            manifest["control"] = self.controller.state_dict()
+        return _own(self.state), manifest
 
     @classmethod
     def checkpoint_template(
@@ -367,6 +460,7 @@ class AsyncBufferAggregator(Aggregator):
         dispatch: Optional[Dict[str, Any]] = None,
         fused_server: bool = False,
         tracer=None,
+        controller=None,
     ):
         self.fed = fed
         self.acfg = acfg
@@ -375,6 +469,7 @@ class AsyncBufferAggregator(Aggregator):
         self.seed = seed
         self.fused_server = fused_server
         self.tracer = get_tracer(tracer)
+        self.controller = controller
         if pcfg.partial_progress and pcfg.local_steps != fed.local_steps:
             raise ValueError(
                 "pcfg.local_steps must equal fed.local_steps under partial "
@@ -387,27 +482,8 @@ class AsyncBufferAggregator(Aggregator):
             from repro.kernels.fedcore import fused_apply_aggregate
 
             apply_fn = fused_apply_aggregate
-        # (a) admission + flush as standalone jits: the flush then compiles in
-        # the same fusion context as the sync server phase, keeping the
-        # buffer_size==K / α==0 path bitwise-equal to federated_round.
-        # DONATION: the buffer lanes, outer state and rng are exclusively owned
-        # and replaced on every call, so they donate — but ``params`` must NOT:
-        # the in-flight dispatch slots snapshot the params pytree BY REFERENCE,
-        # and donating it would invalidate those snapshots. The state splits
-        # into (params, rest) at each call so only ``rest`` donates.
-        self._admit_fn = jax.jit(
-            lambda p, rest, d, r, w: admit_delta(
-                fed, acfg, dict(rest, params=p), d, r, w, auto_flush=False,
-                codec=codec,
-            ),
-            donate_argnums=(1,),
-        )
-        self._flush_fn = jax.jit(
-            lambda p, rest: flush_buffer(
-                fed, acfg, dict(rest, params=p), apply_fn=apply_fn
-            ),
-            donate_argnums=(1,),
-        )
+        self._apply_fn = apply_fn
+        self._build_agg_fns()
         if state is None:
             state = init_async_state(fed, acfg, params, rng)
         else:
@@ -489,6 +565,89 @@ class AsyncBufferAggregator(Aggregator):
         else:
             for _ in range(pcfg.clients_per_round):
                 self._dispatch()
+
+    def _build_agg_fns(self) -> None:
+        """(Re)build the admission/flush jits from the CURRENT ``self.acfg``.
+
+        Called at construction and again by :meth:`apply_knobs`: both jits
+        close over ``acfg`` (α enters the staleness discount in-graph, M fixes
+        the buffer-lane shapes), so a knob change needs fresh closures — the
+        governor's bucketed grids (α on 1/16 steps, M on powers of two) bound
+        the retraces to a handful per run.
+
+        (a) admission + flush as standalone jits: the flush then compiles in
+        the same fusion context as the sync server phase, keeping the
+        buffer_size==K / α==0 path bitwise-equal to federated_round.
+        DONATION: the buffer lanes, outer state and rng are exclusively owned
+        and replaced on every call, so they donate — but ``params`` must NOT:
+        the in-flight dispatch slots snapshot the params pytree BY REFERENCE,
+        and donating it would invalidate those snapshots. The state splits
+        into (params, rest) at each call so only ``rest`` donates."""
+        fed, acfg, codec = self.fed, self.acfg, self.codec
+        apply_fn = self._apply_fn
+        self._admit_fn = jax.jit(
+            lambda p, rest, d, r, w: admit_delta(
+                fed, acfg, dict(rest, params=p), d, r, w, auto_flush=False,
+                codec=codec,
+            ),
+            donate_argnums=(1,),
+        )
+        self._flush_fn = jax.jit(
+            lambda p, rest: flush_buffer(
+                fed, acfg, dict(rest, params=p), apply_fn=apply_fn
+            ),
+            donate_argnums=(1,),
+        )
+
+    def apply_knobs(self, update) -> None:
+        """Apply an async :class:`KnobUpdate` at a flush boundary.
+
+        ``staleness_alpha`` changes the in-graph discount (jit rebuild);
+        ``buffer_size`` additionally reshapes the buffer lanes, which is only
+        sound when the buffer is EMPTY — every flush drains it, and
+        ``control_step`` runs inside ``_flush_row``, so the invariant holds by
+        construction (and is asserted here against misuse). The dispatch
+        timeline is pure in ``(pcfg, seed)`` and neither knob touches it, so a
+        governed run stays exactly resumable."""
+        if update.clients_per_round is not None or update.deadline is not None:
+            raise ValueError(
+                "async control drives staleness_alpha/buffer_size only: the "
+                "dispatch timeline is pure in (participation config, seed) "
+                "and cannot change mid-run (cohort/deadline are sync knobs)"
+            )
+        acfg = self.acfg
+        if update.staleness_alpha is not None:
+            acfg = replace(acfg, staleness_alpha=float(update.staleness_alpha))
+        if (
+            update.buffer_size is not None
+            and int(update.buffer_size) != acfg.buffer_size
+        ):
+            if int(self.state["buf_count"]) != 0:
+                raise RuntimeError(
+                    f"buffer resize with {int(self.state['buf_count'])} "
+                    f"buffered deltas — knob updates must land at a flush "
+                    f"boundary (the buffer drains at every flush)"
+                )
+            m = int(update.buffer_size)
+            acfg = replace(acfg, buffer_size=m)
+            params = self.state["params"]
+            self.state = dict(
+                self.state,
+                buffer=jax.tree_util.tree_map(
+                    lambda p: jnp.zeros((m,) + p.shape, jnp.float32), params
+                ),
+                buf_weights=jnp.zeros((m,), jnp.float32),
+                buf_staleness=jnp.zeros((m,), jnp.float32),
+            )
+        if acfg != self.acfg:
+            self.acfg = acfg
+            self._build_agg_fns()
+        self._notify_knobs(update)
+
+    def _notify_knobs(self, update) -> None:
+        """Hook fired after a knob update is applied server-side; the
+        cross-process runtime overrides this to expose the live knob values
+        through the backend's metrics extras."""
 
     # --- dispatch machinery (serialized state) ----------------------------
     def _dispatch(self) -> None:
@@ -623,6 +782,13 @@ class AsyncBufferAggregator(Aggregator):
             )
         self._losses, self._staleness, self._res_norms = [], [], []
         self._trace_flush(row, deadline)
+        # the flush boundary is the async control point: the buffer just
+        # drained, so a knob update (α rebuild, buffer resize) is always safe
+        # here. Applied knobs are echoed into the row for the CSV/bench trail.
+        update = self.control_step(row)
+        if update is not None:
+            for k, v in update.knob_dict().items():
+                row[f"knob_{k}"] = v
         return row
 
     def _trace_flush(self, row: Dict[str, Any], deadline: bool) -> None:
@@ -719,6 +885,11 @@ class AsyncBufferAggregator(Aggregator):
                 for finish, index, _, _, ver in entries
             ],
         )
+        if self.controller is not None and self.controller.enabled:
+            # controller state rides the manifest (JSON floats round-trip
+            # exactly); absent entirely for static/None, keeping the default
+            # checkpoint byte-identical to the uncontrolled schema
+            manifest["control"] = self.controller.state_dict()
         return tree, manifest
 
     def _restore_dispatch(self, manifest: Dict[str, Any], inflight) -> None:
@@ -817,11 +988,12 @@ class AsyncFederationDriver(AsyncBufferAggregator):
         dispatch: Optional[Dict[str, Any]] = None,
         fused_server: bool = False,
         tracer=None,
+        controller=None,
     ):
         super().__init__(
             fed, acfg, pcfg, seed=seed, params=params, rng=rng, state=state,
             codec=codec, dispatch=dispatch, fused_server=fused_server,
-            tracer=tracer,
+            tracer=tracer, controller=controller,
         )
         self.make_batches = make_batches
         fed1 = replace(fed, clients_per_round=1, keep_inner_state=False)

@@ -64,6 +64,22 @@ which is what makes ``--aggregation async --resume`` exact: every update
 checkpoints the buffer lanes, residual store, dispatch cursor and in-flight
 params snapshots, and a killed-and-resumed run is bitwise the uninterrupted one.
 
+Adaptive aggregation control (``--control``, docs/control.md): close the loop
+between the observed telemetry and the aggregation knobs. ``--control
+staleness`` (async) drives ``--staleness-alpha``/``--buffer-size`` toward a
+target admitted-staleness quantile read off the cumulative histogram;
+``--control cohort`` (sync) tunes the straggler deadline and
+``--clients`` from the realized effective-K fraction. ``--control static``
+(the default) is the identity — bitwise the uncontrolled run. Knob updates
+land only at round/flush boundaries on bucketed grids (α on 1/16 steps, buffer
+on powers of two, K in steps of 2), are emitted as ``knob_update`` obs events
+with their triggering evidence, and the controller state rides the checkpoint
+manifest so a governed run kills and ``--resume``\\ s bitwise.
+
+The full flag matrix — how ``--aggregation`` × ``--uplink`` × ``--runtime`` ×
+``--control`` compose, and which doc covers which layer — is mapped in
+docs/architecture.md.
+
 Usage (CPU, minutes):
   PYTHONPATH=src python -m repro.launch.train --arch photon-75m --reduced \
       --rounds 4 --local-steps 8 --clients 4 --population 8
@@ -74,6 +90,9 @@ Usage (CPU, minutes):
   PYTHONPATH=src python -m repro.launch.train --reduced --rounds 4 \
       --aggregation async --buffer-size 2 --straggler-profile heavy \
       --uplink topk --topk-fraction 0.05 --ckpt-dir /tmp/ck   # then --resume
+  PYTHONPATH=src python -m repro.launch.train --reduced --rounds 6 \
+      --aggregation async --straggler-profile heavy --control staleness \
+      --control-target 4 --trace /tmp/run.jsonl
 """
 from __future__ import annotations
 
@@ -89,6 +108,12 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
+from repro.control import (
+    CohortTuner,
+    FederationController,
+    KnobUpdate,
+    StalenessGovernor,
+)
 from repro.core import (
     STRAGGLER_PROFILES,
     UPLINK_SCHEMES,
@@ -143,6 +168,89 @@ def _start_metrics(args, tracer, extra=None):
     srv = MetricsServer(tracer, port=args.metrics_port, extra=extra)
     print(f"metrics serving on {srv.host}:{srv.port}", flush=True)
     return srv
+
+
+def _build_controller(args, acfg=None, straggler=None):
+    """``--control`` → a :class:`FederationController` (or None for static).
+
+    Validates the policy/aggregation pairing up front: the staleness governor
+    only has async knobs, the cohort tuner only sync ones, and cohort resizing
+    is incompatible with ``--keep-opt`` (the persisted inner state is
+    K-shaped)."""
+    if args.control == "static":
+        return None  # no controller object at all: the bitwise-default path
+    if args.control == "staleness":
+        if args.aggregation != "async":
+            raise SystemExit(
+                "--control staleness drives the async buffer knobs "
+                "(--staleness-alpha/--buffer-size) — it requires "
+                "--aggregation async; for sync runs use --control cohort"
+            )
+        policy = StalenessGovernor(
+            staleness_alpha=args.staleness_alpha,
+            buffer_size=acfg.buffer_size,
+            target=args.control_target if args.control_target is not None else 1.0,
+            quantile=args.control_quantile,
+            gain=args.control_gain if args.control_gain is not None else 0.5,
+            buffer_max=max(acfg.buffer_size, args.clients),
+        )
+    else:  # cohort
+        if args.aggregation != "sync":
+            raise SystemExit(
+                "--control cohort drives the sync deadline/cohort knobs — it "
+                "requires --aggregation sync; for async runs use "
+                "--control staleness"
+            )
+        if args.keep_opt:
+            raise SystemExit(
+                "--control cohort resizes the cohort, which is incompatible "
+                "with --keep-opt (the persisted inner optimizer state is "
+                "(K, ...)-shaped)"
+            )
+        if straggler.deadline <= 0.0:
+            raise SystemExit(
+                "--control cohort needs a finite straggler deadline to tune: "
+                "pick --straggler-profile mild/heavy or set --deadline"
+            )
+        policy = CohortTuner(
+            clients_per_round=args.clients,
+            deadline=straggler.deadline,
+            population=args.population,
+            target=args.control_target if args.control_target is not None else 0.9,
+            gain=args.control_gain if args.control_gain is not None else 0.25,
+        )
+    return FederationController(
+        policy, window=args.control_window, interval=args.control_interval
+    )
+
+
+def _restore_controller(controller, manifest, latest):
+    """Reconcile ``--control`` with the checkpoint's controller state.
+
+    Returns the restored controller (None for a static resume). Refuses every
+    asymmetric combination — a governed run resumed statically (or vice versa)
+    would silently follow a different knob trajectory than the original."""
+    ctrl_state = manifest.get("control") if isinstance(manifest, dict) else None
+    if controller is None:
+        if ctrl_state is not None:
+            raise SystemExit(
+                f"--resume: checkpoint round {latest} carries live "
+                f"--control {ctrl_state.get('policy')} state but this run asked "
+                f"for --control static — the knob trajectory would diverge; "
+                f"resume with the original policy"
+            )
+        return None
+    if ctrl_state is None:
+        raise SystemExit(
+            f"--resume: --control {controller.policy.name} requested but "
+            f"checkpoint round {latest} was written without a controller — "
+            f"resume with --control static or start fresh"
+        )
+    try:
+        controller.load_state_dict(ctrl_state)
+    except ValueError as e:
+        raise SystemExit(f"--resume: {e}")
+    return controller
 
 
 def parse_args(argv=None):
@@ -255,6 +363,30 @@ def parse_args(argv=None):
     ap.add_argument("--chaos-kill", type=float, default=0.0,
                     help="fault injection: P(process hard-exits before a send)")
     ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument(
+        "--control", default="static", choices=["static", "staleness", "cohort"],
+        help="closed-loop aggregation control (docs/control.md): static = the "
+             "identity policy, bitwise the uncontrolled run; staleness (async "
+             "only) governs --staleness-alpha/--buffer-size toward a target "
+             "admitted-staleness quantile; cohort (sync only) tunes the "
+             "straggler deadline and --clients from the effective-K fraction",
+    )
+    ap.add_argument("--control-target", type=float, default=None,
+                    help="policy setpoint: the admitted-staleness quantile "
+                         "value in server rounds (staleness, default 1.0) or "
+                         "the effective-K fraction (cohort, default 0.9)")
+    ap.add_argument("--control-quantile", type=float, default=0.9,
+                    help="--control staleness: which staleness quantile to "
+                         "hold at the target")
+    ap.add_argument("--control-gain", type=float, default=None,
+                    help="proportional gain of the control law (default 0.5 "
+                         "staleness / 0.25 cohort); lower it if the policy "
+                         "oscillates (docs/control.md tuning guide)")
+    ap.add_argument("--control-window", type=int, default=4,
+                    help="metric rows the controller aggregates per decision")
+    ap.add_argument("--control-interval", type=int, default=1,
+                    help="boundaries between control decisions (1 = every "
+                         "round/flush)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="append structured trace events to this JSONL file "
                          "(docs/observability.md); under --runtime sockets "
@@ -356,11 +488,12 @@ def run(args, cfg=None) -> dict:
     # the jitted round as traced arguments: per-round participation changes
     # (dropouts, stragglers, K_eff < K, realized τ_i) never trigger a recompile.
     tracer = _build_tracer(args, "server")
+    controller = _build_controller(args, straggler=straggler)
     agg = SyncAggregator(
         loss_fn, fed, pcfg, codec=codec, seed=args.seed,
         partial_progress=args.partial_progress, fused_server=args.fused_server,
         params=params, rng=jax.random.PRNGKey(args.seed + 1),
-        tracer=tracer,
+        tracer=tracer, controller=controller,
     )
     metrics_srv = _start_metrics(args, tracer)
 
@@ -412,6 +545,18 @@ def run(args, cfg=None) -> dict:
                     f"{args.uplink} would silently discard them — use the "
                     f"original codec or start fresh"
                 )
+            controller = _restore_controller(
+                controller, agg_man if isinstance(agg_man, dict) else {}, latest
+            )
+            if controller is not None:
+                # the checkpoint may have been taken mid-trajectory: rebuild
+                # the aggregator at the controller's CURRENT knob values, not
+                # the CLI defaults, before any round runs
+                knobs = controller.knobs()
+                agg.apply_knobs(KnobUpdate(
+                    clients_per_round=int(knobs["clients_per_round"]),
+                    deadline=knobs["deadline"],
+                ))
             agg.state = state
             start_round = latest + 1
             for i, s in enumerate(streams):
@@ -477,10 +622,20 @@ def _run_sync_rounds(args, model, agg, streams, val_stream, ckpt, logger,
             f"round {rnd}: loss={metrics['train_loss']:.4f} val_ppl={val_ppl:.2f} "
             f"pg_norm={metrics['pseudo_grad_norm']:.4f} "
             f"consensus={metrics['client_consensus']:.3f} "
-            f"eff_K={plan.effective_k}/{args.clients} "
+            f"eff_K={plan.effective_k}/{len(plan.selected)} "
             f"stragglers={plan.n_stragglers} dropped={plan.n_dropped}"
             f"{partial} [{metrics['seconds']:.1f}s]"
         )
+        # the round boundary is the sync control point: the cohort tuner sees
+        # this round's composed row and may move the deadline/cohort knobs for
+        # the NEXT round (applied knobs echo into the logged row)
+        update = agg.control_step(metrics)
+        if update is not None:
+            for k, v in update.knob_dict().items():
+                metrics[f"knob_{k}"] = v
+            print("  control: " + ", ".join(
+                f"{k}={v:g}" for k, v in update.knob_dict().items()
+            ))
         if logger:
             logger.log(metrics)
         if ckpt:
@@ -507,7 +662,20 @@ _ASYNC_RESUME_ARGS = (
     "arch", "reduced", "seq_len", "heterogeneous",
     "inner_lr", "outer", "outer_lr", "fedprox_mu",
     "dp_clip", "dp_noise", "pseudo_grad_dtype",
+    "control", "control_target", "control_quantile", "control_gain",
+    "control_window", "control_interval",
 )
+
+# flags with TRUTHY defaults that postdate older checkpoints: a checkpoint
+# written before the flag existed behaved exactly like today's default, so
+# only a non-default value conflicts (the falsy-default case is handled by
+# the `not ours` skip below)
+_RESUME_ARG_DEFAULTS = {
+    "control": "static",
+    "control_quantile": 0.9,
+    "control_window": 4,
+    "control_interval": 1,
+}
 
 
 def _run_worker(args, model, fed, pcfg, streams, codec=None) -> dict:
@@ -570,6 +738,7 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
         pcfg = dataclasses.replace(
             pcfg, partial_progress=True, local_steps=args.local_steps
         )
+    controller = _build_controller(args, acfg=acfg)
 
     def loss_fn(p, b):
         return model.loss(p, b)
@@ -602,7 +771,9 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
             ck_args = extra.get("args", {})
             for key in _ASYNC_RESUME_ARGS:
                 ours = getattr(args, key)
-                if key not in ck_args and not ours:
+                if key not in ck_args and (
+                    not ours or ours == _RESUME_ARG_DEFAULTS.get(key)
+                ):
                     # the flag postdates this checkpoint (e.g. --fused-server on
                     # a PR-4 checkpoint): the old run used today's default
                     # semantics, so only a non-default value conflicts
@@ -617,6 +788,17 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
                             f"under a different configuration would silently "
                             f"replay a different run"
                         )
+            controller = _restore_controller(controller, dispatch, latest)
+            if controller is not None:
+                # rebuild the async config at the controller's checkpointed
+                # knob values: the buffer lanes in the npz have THAT shape,
+                # and the resumed governor continues its trajectory from them
+                knobs = controller.knobs()
+                acfg = dataclasses.replace(
+                    acfg,
+                    staleness_alpha=float(knobs["staleness_alpha"]),
+                    buffer_size=int(knobs["buffer_size"]),
+                )
             like = AsyncBufferAggregator.checkpoint_template(
                 fed, acfg, pcfg, params, codec
             )
@@ -651,18 +833,19 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
             backend, fed, acfg, pcfg, flush_deadline=args.flush_deadline,
             seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
             codec=codec, state=state, dispatch=dispatch,
-            fused_server=args.fused_server, tracer=tracer,
+            fused_server=args.fused_server, tracer=tracer, controller=controller,
         )
     else:
         driver = AsyncFederationDriver(
             loss_fn, fed, acfg, pcfg, make_batches,
             seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
             codec=codec, state=state, dispatch=dispatch,
-            fused_server=args.fused_server, tracer=tracer,
+            fused_server=args.fused_server, tracer=tracer, controller=controller,
         )
     metrics_srv = _start_metrics(
         args, tracer,
-        extra=(backend.worker_liveness if backend is not None else None),
+        # liveness + live control knobs (control_* gauges) from the backend
+        extra=(backend.metrics_extras if backend is not None else None),
     )
 
     # reference: what the deadline-masking sync schedule pays to aggregate the
@@ -721,10 +904,16 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
             f"val_ppl={row['val_ppl']:.2f} "
             f"pg_norm={row['pseudo_grad_norm']:.4f} "
             f"staleness={row['staleness_mean']:.2f}/{row['staleness_max']:.0f} "
-            f"buf={row['buffer_fill']:.0f}/{acfg.buffer_size} "
+            f"buf={row['buffer_fill']:.0f}/{driver.acfg.buffer_size} "
             f"t_sim={row['sim_time']:.2f} "
             f"speedup={row['wallclock_speedup']:.2f}x [{row['seconds']:.1f}s]"
         )
+        knobs = {k[len("knob_"):]: v for k, v in row.items()
+                 if k.startswith("knob_")}
+        if knobs:
+            print("  control: " + ", ".join(
+                f"{k}={v:g}" for k, v in knobs.items()
+            ))
         if logger:
             logger.log(row)
         if ckpt:

@@ -131,6 +131,70 @@ def staleness_stats(staleness: Iterable[float]) -> Dict[str, float]:
     return out
 
 
+def staleness_hist_counts(staleness: Iterable[float]) -> np.ndarray:
+    """Per-bucket counts of admitted-delta staleness, aligned with
+    ``_STALENESS_BUCKETS`` (the same buckets ``staleness_stats`` logs and the
+    Prometheus endpoint exports) — the cumulative-histogram input the control
+    layer's staleness governor reads quantiles from."""
+    s = np.asarray(list(staleness), np.float64)
+    counts = []
+    for lo, hi in _STALENESS_BUCKETS:
+        if hi is None:
+            counts.append(float((s >= lo).sum()))
+        else:
+            counts.append(float(((s >= lo) & (s <= hi)).sum()))
+    return np.asarray(counts, np.float64)
+
+
+def histogram_quantile(counts, q: float) -> float:
+    """Conservative quantile off the cumulative staleness histogram.
+
+    Returns the UPPER edge of the first bucket whose cumulative count reaches
+    ``q * total`` (ties included: a ``q`` landing exactly on a cumulative
+    boundary resolves to that bucket). The open-ended last bucket has no finite
+    upper edge and reports its LOWER edge instead; an empty histogram is 0.0.
+    The possible return values are therefore exactly the bucket edges
+    {0, 1, 3, 7, 8} — coarse on purpose: a governor stepping on bucket edges
+    cannot chase sub-bucket noise.
+    """
+    c = np.asarray(counts, np.float64)
+    if c.shape[0] != len(_STALENESS_BUCKETS):
+        raise ValueError(
+            f"expected {len(_STALENESS_BUCKETS)} bucket counts, got {c.shape[0]}"
+        )
+    total = float(c.sum())
+    if total <= 0.0:
+        return 0.0
+    rank = float(q) * total
+    cum = 0.0
+    for (lo, hi), n in zip(_STALENESS_BUCKETS, c):
+        cum += float(n)
+        if cum >= rank:
+            return float(hi if hi is not None else lo)
+    return float(_STALENESS_BUCKETS[-1][0])  # pragma: no cover — q > 1 guard
+
+
+def window_mean(rows, key: str, default: float = 0.0) -> float:
+    """Mean of ``row[key]`` over the rows of a metrics window that carry the
+    key; ``default`` when none do (empty window, or a metric the current
+    configuration never emits)."""
+    vals = [float(r[key]) for r in rows if r.get(key) is not None]
+    if not vals:
+        return float(default)
+    return float(sum(vals) / len(vals))
+
+
+def window_concat(rows, key: str) -> List[float]:
+    """Concatenate per-row LIST metrics (e.g. ``admitted_staleness``) across a
+    metrics window; rows without the key contribute nothing."""
+    out: List[float] = []
+    for r in rows:
+        v = r.get(key)
+        if v:
+            out.extend(float(x) for x in v)
+    return out
+
+
 def wallclock_speedup(sync_time: float, async_time: float) -> float:
     """Simulated wall-clock speedup of reaching the same point: how much longer
     the deadline-masking sync schedule would have taken than the async buffered

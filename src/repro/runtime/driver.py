@@ -86,6 +86,14 @@ class ClientBackend:
     def commit(self, index: int, result: ClientResult) -> None:
         """Called in event order after the driver processed ``result``."""
 
+    def apply_knob_update(self, update, acfg) -> None:
+        """The control loop applied a :class:`repro.control.KnobUpdate`
+        server-side; ``acfg`` is the post-update async config. Backends that
+        expose live state (the socket server's metrics extras) record the new
+        knob values here — assignments themselves need nothing: they are
+        self-describing, and admission/flush semantics live entirely in the
+        aggregator that already changed."""
+
     def close(self) -> None:
         pass
 
@@ -220,6 +228,11 @@ class FederationDriver(AsyncBufferAggregator):
                 rng=rng,
             )
         )
+
+    def _notify_knobs(self, update) -> None:
+        # forward applied knob updates to the backend so the server process
+        # can surface the live values (Prometheus control_* gauges)
+        self.backend.apply_knob_update(update, self.acfg)
 
     # --- event loop -------------------------------------------------------
     def _await_result(self, index: int, rows: List[Dict[str, float]]) -> ClientResult:

@@ -88,6 +88,7 @@ class SocketBackend(ClientBackend):
         # metrics HTTP thread
         self.payload_bytes_rx = 0.0
         self._worker_seen: Dict[str, float] = {}
+        self._knobs: Dict[str, float] = {}  # live control knobs (control_* gauges)
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._pending: Dict[int, Assignment] = {}  # index → live assignment
@@ -132,6 +133,29 @@ class SocketBackend(ClientBackend):
             self._results.pop(index, None)
         if self.stream_states is not None and result.stream_state is not None:
             self.stream_states[result.client] = result.stream_state
+
+    def apply_knob_update(self, update, acfg) -> None:
+        """Server-side landing of a control-loop :class:`KnobUpdate`: the
+        aggregator already rebuilt its jits/lanes; the backend's job is to make
+        the LIVE knob values observable — they feed the metrics endpoint as
+        ``control_*`` gauges (plain floats, safe for the HTTP thread). Workers
+        need no notification: assignments are self-describing and admission
+        semantics live entirely server-side."""
+        with self._lock:
+            self._knobs["control_staleness_alpha"] = float(acfg.staleness_alpha)
+            self._knobs["control_buffer_size"] = float(acfg.buffer_size)
+        if self.tracer.enabled:
+            self.tracer.count("knob_updates_applied")
+
+    def control_knobs(self) -> Dict[str, float]:
+        """Current server-side control knob values (empty when uncontrolled)."""
+        with self._lock:
+            return dict(self._knobs)
+
+    def metrics_extras(self) -> Dict[str, float]:
+        """The combined extras callable for the metrics endpoint: worker
+        liveness plus the live control knobs."""
+        return {**self.worker_liveness(), **self.control_knobs()}
 
     def finish(self) -> None:
         """Start answering every pull with ``done`` (run complete)."""

@@ -1,0 +1,472 @@
+"""The adaptive aggregation control loop (src/repro/control, docs/control.md).
+
+Keystone identities:
+  - ``--control static`` (and no controller at all) is BITWISE the
+    uncontrolled run — metric rows, server state, checkpoint manifest (no
+    ``control`` key) all identical;
+  - a governed run is deterministic in its observation history: a killed
+    governed async run restored through the checkpoint manifest's ``control``
+    state replays the remaining knob decisions and metric rows bitwise;
+  - knob changes only ever land at round/flush boundaries, on quantized grids,
+    and every applied update is observable (history, ``knob_*`` row echoes,
+    ``knob_update`` trace events).
+
+Plus the fedmetrics window/histogram helpers the policies consume: empty
+windows, degenerate single-bucket histograms, quantiles at bucket edges.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+from conftest import make_batches, make_params, quad_loss, sgd_inner
+
+from repro.checkpoint import CheckpointManager
+from repro.control import (
+    ALPHA_MAX,
+    ALPHA_STEP,
+    CohortTuner,
+    FederationController,
+    KnobUpdate,
+    StalenessGovernor,
+    StaticPolicy,
+    build_controller,
+)
+from repro.core import (
+    STRAGGLER_PROFILES,
+    AsyncAggConfig,
+    AsyncBufferAggregator,
+    AsyncFederationDriver,
+    FederatedConfig,
+    OuterOptConfig,
+    ParticipationConfig,
+    SyncAggregator,
+)
+from repro.metrics import (
+    histogram_quantile,
+    participation_metrics,
+    staleness_hist_counts,
+    window_concat,
+    window_mean,
+)
+
+
+def _strip_update(rows):
+    # run_updates numbers rows from 0 per CALL; the resume identity is about
+    # the federation state, not the local loop counter
+    return [{k: v for k, v in r.items() if k != "update"} for r in rows]
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# fedmetrics window/histogram helpers (the policies' input reducers)
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_helpers_empty_window():
+    counts = staleness_hist_counts([])
+    np.testing.assert_array_equal(counts, np.zeros(5))
+    assert histogram_quantile(counts, 0.9) == 0.0  # empty histogram -> 0.0
+    assert window_concat([], "admitted_staleness") == []
+    assert window_mean([], "effective_k", default=-1.0) == -1.0
+    # rows present but none carrying the key: still the default
+    assert window_mean([{"x": 1.0}], "effective_k", default=7.0) == 7.0
+
+
+def test_staleness_hist_counts_bucket_alignment():
+    # buckets: [0], [1], [2,3], [4,7], [8, inf)
+    counts = staleness_hist_counts([0, 1, 2, 3, 4, 7, 8, 100])
+    np.testing.assert_array_equal(counts, [1.0, 1.0, 2.0, 2.0, 2.0])
+
+
+def test_histogram_quantile_single_bucket_degenerate():
+    # every admitted delta in one bucket: any quantile is that bucket's edge
+    all_fresh = staleness_hist_counts([0.0, 0.0, 0.0])
+    all_mid = staleness_hist_counts([2, 3, 2])
+    all_tail = staleness_hist_counts([9, 12, 64])
+    for q in (0.01, 0.5, 0.9, 1.0):
+        assert histogram_quantile(all_fresh, q) == 0.0
+        assert histogram_quantile(all_mid, q) == 3.0  # upper edge of [2,3]
+        # the open-ended bucket has no finite upper edge: its LOWER edge
+        assert histogram_quantile(all_tail, q) == 8.0
+
+
+def test_histogram_quantile_at_bucket_edges():
+    counts = np.ones(5)  # one delta per bucket, total 5
+    # rank q*5 lands exactly on each cumulative boundary; ties resolve INTO
+    # that bucket (conservative upper edge), so the edges walk {0,1,3,7,8}
+    assert histogram_quantile(counts, 0.2) == 0.0
+    assert histogram_quantile(counts, 0.4) == 1.0
+    assert histogram_quantile(counts, 0.6) == 3.0
+    assert histogram_quantile(counts, 0.8) == 7.0
+    assert histogram_quantile(counts, 1.0) == 8.0
+    # just past a boundary spills into the next bucket
+    assert histogram_quantile(counts, 0.41) == 3.0
+    with pytest.raises(ValueError):
+        histogram_quantile(np.ones(3), 0.5)  # wrong bucket arity
+
+
+def test_window_helpers_reduce_across_rows():
+    rows = [
+        {"effective_k": 4.0, "admitted_staleness": [0.0, 1.0]},
+        {"admitted_staleness": []},  # falsy list contributes nothing
+        {"effective_k": 2.0, "admitted_staleness": [3.0]},
+    ]
+    assert window_mean(rows, "effective_k") == 3.0
+    assert window_concat(rows, "admitted_staleness") == [0.0, 1.0, 3.0]
+
+
+# ---------------------------------------------------------------------------
+# policies: directions, deadband, bounds, quantization, serialization
+# ---------------------------------------------------------------------------
+
+
+def _stale_row(values):
+    return {"admitted_staleness": [float(v) for v in values]}
+
+
+def test_governor_raises_discount_and_grows_buffer_when_stale():
+    g = StalenessGovernor(staleness_alpha=0.5, buffer_size=2, target=1.0,
+                          buffer_max=8)
+    up = g.observe([_stale_row([8, 8, 8, 8])])  # q90 = 8, error = +7
+    assert up is not None
+    assert up.staleness_alpha == ALPHA_MAX  # 0.5 + 0.5*7 clipped to 2.0
+    assert up.buffer_size == 4  # powers of two, upward
+    assert up.evidence["staleness_quantile"] == 8.0
+    assert g.knobs() == {"staleness_alpha": 2.0, "buffer_size": 4.0}
+
+
+def test_governor_trades_headroom_for_update_frequency():
+    # observed staleness far below target: relax alpha, shrink the buffer
+    g = StalenessGovernor(staleness_alpha=1.0, buffer_size=4, target=3.0)
+    up = g.observe([_stale_row([0, 0, 0, 0])])  # q90 = 0, error = -3
+    assert up.staleness_alpha == 0.0 and up.buffer_size == 2
+    # alpha quantizes onto the 1/16 grid
+    g2 = StalenessGovernor(staleness_alpha=1.0, buffer_size=4, target=1.1,
+                           gain=0.33)
+    up2 = g2.observe([_stale_row([0, 0, 0])])  # error = -1.1, step = -0.363
+    assert up2.staleness_alpha == pytest.approx(
+        round((1.0 - 0.33 * 1.1) / ALPHA_STEP) * ALPHA_STEP
+    )
+
+
+def test_governor_deadband_and_empty_window_hold_fire():
+    g = StalenessGovernor(staleness_alpha=0.5, buffer_size=4, target=1.0)
+    assert g.observe([{"buffer_fill": 4.0}]) is None  # no staleness yet
+    assert g.observe([_stale_row([1, 1, 1])]) is None  # exactly on target
+    assert g.knobs() == {"staleness_alpha": 0.5, "buffer_size": 4.0}
+
+
+def test_governor_pinned_at_bounds_returns_none():
+    g = StalenessGovernor(staleness_alpha=2.0, buffer_size=4, target=0.0,
+                          buffer_max=4)
+    # stale reading, but alpha is at ALPHA_MAX and the buffer at buffer_max:
+    # nothing can move, and a no-op must not masquerade as an update
+    assert g.observe([_stale_row([8, 8, 8])]) is None
+    g2 = StalenessGovernor(staleness_alpha=0.0, buffer_size=1, target=8.0)
+    assert g2.observe([_stale_row([0, 0, 0])]) is None
+
+
+def test_governor_validates_and_serializes():
+    with pytest.raises(ValueError):
+        StalenessGovernor(quantile=0.0)
+    with pytest.raises(ValueError):
+        StalenessGovernor(target=-1.0)
+    g = StalenessGovernor(staleness_alpha=0.5, buffer_size=2, target=1.0,
+                          buffer_max=8)
+    g.observe([_stale_row([8, 8, 8])])
+    blob = json.dumps(g.state_dict())  # JSON round-trip, exactly
+    g2 = StalenessGovernor()
+    g2.load_state_dict(json.loads(blob))
+    assert g2.knobs() == g.knobs()
+    # identical histories keep producing identical decisions
+    w = [_stale_row([0, 0, 0, 0])]
+    assert g.observe(list(w)) == g2.observe(list(w))
+    with pytest.raises(ValueError):
+        g2.load_state_dict({"no_such_field": 1.0})
+
+
+def test_cohort_tuner_directions_and_saturation():
+    heavy = STRAGGLER_PROFILES["heavy"].deadline
+    t = CohortTuner(clients_per_round=8, deadline=heavy, population=16,
+                    target=0.9)
+    up = t.observe([{"effective_k": 2.0}])  # fraction 0.25: starved
+    assert up.deadline is not None and up.deadline > heavy
+    assert up.clients_per_round is None  # deadline not saturated yet
+    # pin the deadline at its max: the next starved reading moves K instead
+    t.deadline = t.deadline_max
+    up2 = t.observe([{"effective_k": 2.0}])
+    assert up2.deadline is None and up2.clients_per_round == 10
+    # over-provisioned rounds walk the deadline back down
+    t2 = CohortTuner(clients_per_round=8, deadline=2.0, population=16,
+                     target=0.5)
+    up3 = t2.observe([{"effective_k": 8.0}])  # fraction 1.0 > target
+    assert up3.deadline is not None and up3.deadline < 2.0
+    # deadband and no-participation-rows hold fire
+    t3 = CohortTuner(clients_per_round=8, deadline=1.0, population=16,
+                     target=0.5, deadband=0.05)
+    assert t3.observe([{"effective_k": 4.1}]) is None
+    assert t3.observe([{"sim_time": 1.0}]) is None
+    with pytest.raises(ValueError):
+        CohortTuner(clients_per_round=8, deadline=0.0, population=16)
+    with pytest.raises(ValueError):
+        CohortTuner(clients_per_round=8, deadline=1.0, population=16,
+                    target=1.5)
+
+
+def test_controller_window_interval_and_factory():
+    ctl = FederationController(
+        StalenessGovernor(staleness_alpha=0.5, buffer_size=4, target=1.0),
+        window=2, interval=2,
+    )
+    assert ctl.enabled
+    assert ctl.observe(_stale_row([8, 8, 8])) is None  # cadence: row 1 of 2
+    up = ctl.observe(_stale_row([8, 8, 8]))  # cadence fires on row 2
+    assert up is not None and ctl.n_updates == 1
+    assert len(ctl.rows) == 2  # window stays bounded
+    assert ctl.history[0]["knobs"] == up.knob_dict()
+    # static is no controller at all; unknown names are refused
+    assert build_controller("static") is None
+    with pytest.raises(ValueError):
+        build_controller("pid")
+    # a static controller attached anyway reports disabled
+    assert not FederationController(StaticPolicy()).enabled
+    # resume refuses a policy mismatch (the --control flag changed)
+    other = FederationController(StaticPolicy())
+    with pytest.raises(ValueError):
+        other.load_state_dict(ctl.state_dict())
+    # state_dict is JSON-clean and round-trips the decision state
+    clone = FederationController(
+        StalenessGovernor(), window=4, interval=1
+    )
+    clone.load_state_dict(json.loads(json.dumps(ctl.state_dict())))
+    assert clone.seen == ctl.seen and clone.rows == ctl.rows
+    assert clone.knobs() == ctl.knobs()
+
+
+# ---------------------------------------------------------------------------
+# aggregator integration: bitwise-static, live knob application, kill/resume
+# ---------------------------------------------------------------------------
+
+
+def _driver(controller=None, state=None, dispatch=None, buffer_size=4,
+            alpha=0.5, tracer=None):
+    tau, k = 3, 4
+    fed = FederatedConfig(
+        clients_per_round=k, local_steps=tau, inner=sgd_inner(lr=0.05),
+        outer=OuterOptConfig(name="fedavg", lr=1.0),
+    )
+    acfg = AsyncAggConfig(buffer_size=buffer_size, staleness_alpha=alpha)
+    pcfg = ParticipationConfig(
+        population=8, clients_per_round=k, dropout_rate=0.1,
+        straggler=STRAGGLER_PROFILES["heavy"], weighting="examples",
+    )
+    drv = AsyncFederationDriver(
+        quad_loss, fed, acfg, pcfg,
+        lambda cid: make_batches(tau, 1, seed=100 + cid),
+        seed=3, params=make_params(), rng=jax.random.PRNGKey(1),
+        state=state, dispatch=dispatch, controller=controller, tracer=tracer,
+    )
+    return drv, fed, acfg, pcfg
+
+
+def _governor_controller(buffer_size=4, alpha=0.5, target=3.0):
+    return FederationController(
+        StalenessGovernor(staleness_alpha=alpha, buffer_size=buffer_size,
+                          target=target, buffer_max=8),
+        window=2,
+    )
+
+
+def test_async_static_controller_is_bitwise_uncontrolled():
+    bare, *_ = _driver(controller=None)
+    hist_bare = bare.run_updates(4)
+    static, *_ = _driver(controller=FederationController(StaticPolicy()))
+    hist_static = static.run_updates(4)
+    assert hist_bare == hist_static
+    tree_a, man_a = bare.checkpoint()
+    tree_b, man_b = static.checkpoint()
+    assert man_a == man_b
+    assert "control" not in man_b  # checkpoint bytes identical to PR-7 schema
+    _assert_trees_equal(tree_a, tree_b)
+
+
+def test_async_governor_moves_knobs_at_flush_boundaries():
+    drv, _, acfg, _ = _driver(controller=_governor_controller())
+    hist = drv.run_updates(4)
+    ctl = drv.controller
+    assert ctl.history, "governor never fired under an over-provisioned buffer"
+    # observed staleness sits below target 3: the governor trades headroom,
+    # shrinking the buffer (and the buffer lanes resize with it)
+    assert drv.acfg.buffer_size < acfg.buffer_size
+    m = drv.acfg.buffer_size
+    assert drv.state["buf_weights"].shape == (m,)
+    assert jax.tree_util.tree_leaves(drv.state["buffer"])[0].shape[0] == m
+    # applied updates are echoed into the flush rows for the CSV/bench trail
+    echoed = [r for r in hist if any(k.startswith("knob_") for k in r)]
+    assert len(echoed) == len(ctl.history)
+    # ...and the checkpoint manifest carries the controller state
+    _, manifest = drv.checkpoint()
+    assert manifest["control"]["policy"] == "staleness"
+    assert manifest["control"]["n_updates"] == len(ctl.history)
+
+
+def test_async_governed_kill_and_resume_is_bitwise_uninterrupted(tmp_path):
+    """The governed version of THE resume criterion: checkpoint a governed
+    run mid-flight, rebuild controller + aggregator from the manifest, and the
+    continuation (including every future knob decision) is bitwise the
+    uninterrupted run."""
+    drv_a, *_ = _driver(controller=_governor_controller())
+    hist_a = drv_a.run_updates(6)
+
+    drv_b, fed, _, pcfg = _driver(controller=_governor_controller())
+    drv_b.run_updates(3)
+    tree, manifest = drv_b.checkpoint()
+    assert "control" in manifest
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save_server(2, tree, extra={"aggregator": manifest})
+
+    # restore exactly as train.py does: controller first, then the aggregator
+    # config re-derived from the GOVERNED knob values (not the CLI defaults)
+    ctl_c = _governor_controller()
+    ctl_c.load_state_dict(json.loads(json.dumps(manifest["control"])))
+    knobs = ctl_c.knobs()
+    acfg_c = AsyncAggConfig(
+        buffer_size=int(knobs["buffer_size"]),
+        staleness_alpha=float(knobs["staleness_alpha"]),
+    )
+    like = AsyncBufferAggregator.checkpoint_template(
+        fed, acfg_c, pcfg, make_params()
+    )
+    restored, loaded = ckpt.load_server(2, like)
+    assert loaded["extra"]["aggregator"] == manifest  # JSON floats exact
+    drv_c, *_ = _driver(
+        controller=ctl_c, state=restored,
+        dispatch=loaded["extra"]["aggregator"],
+        buffer_size=acfg_c.buffer_size, alpha=acfg_c.staleness_alpha,
+    )
+    hist_c = drv_c.run_updates(3)
+
+    assert _strip_update(hist_a[3:]) == _strip_update(hist_c)
+    tree_a, man_a = drv_a.checkpoint()
+    tree_c, man_c = drv_c.checkpoint()
+    assert man_a == man_c  # controller state + slots + clocks all match
+    _assert_trees_equal(tree_a, tree_c)
+
+
+def test_async_apply_knobs_guards():
+    drv, *_ = _driver()
+    with pytest.raises(ValueError):  # sync knobs refused on the async side
+        drv.apply_knobs(KnobUpdate(clients_per_round=2))
+    while int(drv.state["buf_count"]) == 0:
+        drv.step()
+    with pytest.raises(RuntimeError):  # resize only at a flush boundary
+        drv.apply_knobs(KnobUpdate(buffer_size=2))
+
+
+def test_async_knob_update_events_are_traced(tmp_path):
+    from repro.obs import JsonlSink, Tracer
+
+    path = tmp_path / "trace.jsonl"
+    tracer = Tracer(sink=JsonlSink(str(path)), proc="test", trace_id="ctl")
+    drv, *_ = _driver(controller=_governor_controller(), tracer=tracer)
+    drv.run_updates(3)
+    tracer.close()
+    events = [json.loads(line) for line in path.read_text().splitlines()]
+    knob_events = [e for e in events if e.get("name") == "knob_update"]
+    assert len(knob_events) == len(drv.controller.history)
+    attrs = knob_events[0]["attrs"]
+    assert any(k.startswith("knob_") for k in attrs)
+    assert any(k.startswith("evidence_") for k in attrs)
+    assert attrs["evidence_target"] == 3.0
+
+
+# ---------------------------------------------------------------------------
+# sync cohort control
+# ---------------------------------------------------------------------------
+
+
+def _sync_agg(controller=None, k=8):
+    tau = 3
+    fed = FederatedConfig(
+        clients_per_round=k, local_steps=tau, inner=sgd_inner(lr=0.05),
+        outer=OuterOptConfig(name="fedavg", lr=1.0),
+    )
+    pcfg = ParticipationConfig(
+        population=8, clients_per_round=k,
+        straggler=STRAGGLER_PROFILES["heavy"], weighting="examples",
+    )
+    agg = SyncAggregator(
+        quad_loss, fed, pcfg, seed=5, params=make_params(),
+        rng=jax.random.PRNGKey(9), controller=controller,
+    )
+    return agg, tau
+
+
+def test_sync_static_controller_is_bitwise_uncontrolled():
+    bare, tau = _sync_agg()
+    ctl, _ = _sync_agg(controller=FederationController(StaticPolicy()))
+    for r in range(3):
+        b = make_batches(tau, 8, seed=40 + r)
+        m_a = bare.run_round(b, bare.plan(r))
+        assert bare.control_step({"effective_k": 1.0}) is None
+        m_b = ctl.run_round(b, ctl.plan(r))
+        assert ctl.control_step({"effective_k": 1.0}) is None
+        for k in m_a:
+            np.testing.assert_array_equal(
+                np.asarray(m_a[k]), np.asarray(m_b[k]), err_msg=k
+            )
+    _assert_trees_equal(bare.state, ctl.state)
+    _, man_a = bare.checkpoint()
+    _, man_b = ctl.checkpoint()
+    assert man_a == man_b and "control" not in man_b
+
+
+def test_sync_cohort_tuner_loosens_deadline_for_starved_rounds():
+    heavy = STRAGGLER_PROFILES["heavy"].deadline
+    controller = FederationController(
+        CohortTuner(clients_per_round=8, deadline=heavy, population=8,
+                    target=0.99),
+        window=2,
+    )
+    agg, tau = _sync_agg(controller=controller)
+    updates = []
+    for r in range(4):
+        plan = agg.plan(r)
+        agg.run_round(make_batches(tau, 8, seed=60 + r), plan)
+        up = agg.control_step(participation_metrics(plan))
+        if up is not None:
+            updates.append(up)
+    assert updates, "heavy stragglers under target 0.99 must starve rounds"
+    assert agg.pcfg.straggler.deadline > heavy  # the knob actually landed
+    assert all(u.deadline is not None for u in updates)
+    _, manifest = agg.checkpoint()
+    assert manifest["control"]["policy"] == "cohort"
+
+
+def test_sync_cohort_resize_rebuilds_round_and_guards_keep_opt():
+    agg, tau = _sync_agg(k=8)
+    agg.apply_knobs(KnobUpdate(clients_per_round=6))
+    assert agg.fed.clients_per_round == 6 and agg.pcfg.clients_per_round == 6
+    plan = agg.plan(0)
+    assert len(plan.selected) == 6
+    m = agg.run_round(make_batches(tau, 6, seed=70), plan)  # retraced at K=6
+    assert float(m["train_loss"]) > 0.0
+    with pytest.raises(ValueError):  # async knobs refused on the sync side
+        agg.apply_knobs(KnobUpdate(buffer_size=2))
+    # --keep-opt persists (K, ...)-shaped inner lanes: resize refused
+    fed_keep = FederatedConfig(
+        clients_per_round=4, local_steps=tau, inner=sgd_inner(lr=0.05),
+        outer=OuterOptConfig(name="fedavg", lr=1.0), keep_inner_state=True,
+    )
+    pcfg = ParticipationConfig(population=8, clients_per_round=4)
+    keep = SyncAggregator(quad_loss, fed_keep, pcfg, seed=5,
+                          params=make_params())
+    with pytest.raises(ValueError):
+        keep.apply_knobs(KnobUpdate(clients_per_round=6))
