@@ -1,0 +1,230 @@
+"""Population-scale federation: memory flat in P (ISSUE 9 tentpole).
+
+Part 1 — the memory sweep. A sync run with the topk error-feedback codec and
+``cohort_tile`` streaming runs at P ∈ {1k, 10k, 100k} with everything else
+fixed (same cohort K, same rounds, same per-client work). The deliberately
+large quadratic model (``(256, 256)`` params → 256 KiB per residual row) makes
+the dense counterfactual unmistakable: ``init_uplink_residuals`` at P = 100k
+would allocate P · 256 KiB ≈ 25.6 GiB before the first round. The sweep
+asserts the measured footprint is flat instead:
+
+- exact accounting — the sparse store holds ≤ rounds·K rows at EVERY P (the
+  ever-selected set), so its bytes are bounded by the sampling schedule, not
+  the population; the jitted round state is byte-identical across P;
+- sampled peak RSS — the spread across the whole sweep stays below the dense
+  store of even the SMALLEST population (growing P 100× costs less memory
+  than a single P=1k dense store would).
+
+Part 2 — the bitwise check at P = 100k. The same schedule runs twice on the
+tiny (4, 4) quadratic model: once through :class:`SyncAggregator` (sparse
+store, host gather/scatter) and once through the pure dense reference
+``federated_round_with_uplink`` over an ``init_uplink_residuals`` store
+(6.4 MB at this scale — allocatable on purpose). Asserted bitwise equal:
+the server params after every round, and every ever-selected client's
+residual row. Results land in ``BENCH_population_scale.json`` for the CI
+bench lane's artifact upload.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import PeakRss, emit, live_device_bytes, tree_nbytes
+from repro.core import (
+    FederatedConfig,
+    InnerOptConfig,
+    OuterOptConfig,
+    ParticipationConfig,
+    SyncAggregator,
+    federated_round_with_uplink,
+    get_codec,
+    init_federated_state,
+    init_uplink_residuals,
+)
+
+POPULATION_JSON = "BENCH_population_scale.json"
+
+
+def _quad_loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    loss = jnp.mean(jnp.square(pred - batch["y"]))
+    return loss, {"loss": loss, "grad_norm": jnp.zeros(())}
+
+
+def _make_fed(tau: int, clients: int) -> FederatedConfig:
+    return FederatedConfig(
+        clients_per_round=clients,
+        local_steps=tau,
+        inner=InnerOptConfig(name="sgd", lr_max=0.05, weight_decay=0.0,
+                             grad_clip=1e9, warmup_steps=0, total_steps=10_000,
+                             alpha=1.0),
+        outer=OuterOptConfig(name="fedavg", lr=1.0),
+    )
+
+
+def _round_batches(rnd: int, tau: int, clients: int, dim: int, n: int = 4):
+    """Deterministic per-round batches, identical across every arm and P."""
+    rng = np.random.default_rng(1000 + rnd)
+    return {
+        "x": jnp.asarray(rng.standard_normal((tau, clients, n, dim)), jnp.float32),
+        "y": jnp.asarray(rng.standard_normal((tau, clients, n, dim)), jnp.float32),
+    }
+
+
+def _run_sweep_point(population: int, *, dim: int, rounds: int, tau: int,
+                     clients: int, cohort_tile: int) -> dict:
+    params = {"w": jnp.zeros((dim, dim), jnp.float32)}
+    fed = _make_fed(tau, clients)
+    pcfg = ParticipationConfig(population=population, clients_per_round=clients)
+    codec = get_codec("topk", 0.25)
+    with PeakRss() as mem:
+        agg = SyncAggregator(
+            _quad_loss, fed, pcfg, codec=codec, seed=0, params=params,
+            rng=jax.random.PRNGKey(1), cohort_tile=cohort_tile,
+        )
+        selected = set()
+        for rnd in range(rounds):
+            plan = agg.plan(rnd)
+            selected.update(int(i) for i in plan.selected)
+            agg.run_round(_round_batches(rnd, tau, clients, dim), plan)
+        jax.block_until_ready(agg.state["params"])
+    store = agg.residual_store
+    assert store is not None and len(store) == len(selected), (
+        f"store materialized {len(store)} rows, ever-selected {len(selected)}"
+    )
+    return {
+        "population": population,
+        "ever_selected": len(selected),
+        "store_rows": len(store),
+        "row_bytes": int(store.row_nbytes),
+        "store_bytes": int(store.nbytes),
+        "dense_store_bytes": population * int(store.row_nbytes),
+        "state_bytes": int(tree_nbytes(agg.state)),
+        "live_device_bytes": int(live_device_bytes()),
+        "peak_rss_bytes": int(mem.peak),
+    }
+
+
+def _run_bitwise_check(population: int, *, rounds: int, tau: int,
+                       clients: int, dim: int = 4) -> dict:
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (dim, dim))}
+    fed = _make_fed(tau, clients)
+    pcfg = ParticipationConfig(population=population, clients_per_round=clients)
+    codec = get_codec("topk", 0.25)
+
+    # Arm A: the production aggregator — sparse store, host gather/scatter
+    agg = SyncAggregator(
+        _quad_loss, fed, pcfg, codec=codec, seed=0, params=params,
+        rng=jax.random.PRNGKey(1), donate=False,
+    )
+    # Arm B: the dense reference — the pure population-keyed round over the
+    # full (P, ...) store (6.4 MB at (4,4)/100k: allocatable on purpose)
+    dense_state = init_federated_state(fed, params, jax.random.PRNGKey(1))
+    dense_state["uplink_residuals"] = init_uplink_residuals(
+        codec, params, population
+    )
+    dense_fn = jax.jit(
+        lambda s, b, w, sel: federated_round_with_uplink(
+            _quad_loss, fed, codec, s, b, client_weights=w, selected=sel
+        )
+    )
+
+    params_bitwise = True
+    selected = set()
+    for rnd in range(rounds):
+        plan = agg.plan(rnd)
+        selected.update(int(i) for i in plan.selected)
+        w = jnp.asarray(agg.round_weights(plan))
+        batches = _round_batches(rnd, tau, clients, dim)
+        agg.run_round(batches, plan)
+        dense_state, _ = dense_fn(
+            dense_state, batches, w, jnp.asarray(plan.selected)
+        )
+        params_bitwise &= bool(
+            np.array_equal(np.asarray(agg.state["params"]["w"]),
+                           np.asarray(dense_state["params"]["w"]))
+        )
+
+    dense_rows = np.asarray(dense_state["uplink_residuals"]["w"])
+    rows_bitwise = all(
+        np.array_equal(np.asarray(agg.residual_store.row(cid)["w"]),
+                       dense_rows[cid])
+        for cid in sorted(selected)
+    )
+    assert params_bitwise, "sparse-store params diverged from the dense round"
+    assert rows_bitwise, "sparse residual rows diverged from the dense store"
+    assert len(agg.residual_store) == len(selected)
+    return {
+        "population": population,
+        "rounds": rounds,
+        "ever_selected": len(selected),
+        "params_bitwise": params_bitwise,
+        "residual_rows_bitwise": rows_bitwise,
+    }
+
+
+def main(quick: bool = False) -> None:
+    pops = [1_000, 10_000] if quick else [1_000, 10_000, 100_000]
+    rounds, tau, clients, cohort_tile = (2, 2, 4, 2) if quick else (3, 4, 8, 4)
+    dim = 128 if quick else 256
+
+    sweep = [
+        _run_sweep_point(p, dim=dim, rounds=rounds, tau=tau,
+                         clients=clients, cohort_tile=cohort_tile)
+        for p in pops
+    ]
+
+    # exact accounting: flat in P — the store is bounded by the sampling
+    # schedule (rounds·K rows) at every population, and the jitted round
+    # state is byte-identical across the sweep
+    row = sweep[0]["row_bytes"]
+    max_rows = rounds * clients
+    for pt in sweep:
+        assert pt["row_bytes"] == row
+        assert pt["store_rows"] <= max_rows, (
+            f"P={pt['population']}: {pt['store_rows']} rows > schedule bound "
+            f"{max_rows}"
+        )
+        assert pt["state_bytes"] == sweep[0]["state_bytes"]
+    # sampled memory: the WHOLE sweep's RSS spread stays below the dense
+    # store of even the smallest population
+    rss = [pt["peak_rss_bytes"] for pt in sweep]
+    spread = max(rss) - min(rss)
+    dense_smallest = min(pt["dense_store_bytes"] for pt in sweep)
+    assert spread < dense_smallest, (
+        f"peak RSS spread {spread/2**20:.0f} MiB across P={pops} is not flat "
+        f"(dense store at P={min(pops)} would be {dense_smallest/2**20:.0f} MiB)"
+    )
+
+    bitwise = _run_bitwise_check(
+        pops[-1], rounds=rounds, tau=tau, clients=clients
+    )
+
+    with open(POPULATION_JSON, "w") as f:
+        json.dump({"sweep": sweep, "bitwise": bitwise,
+                   "rss_spread_bytes": int(spread)}, f, indent=2)
+
+    for pt in sweep:
+        emit(
+            f"population_scale/P={pt['population']}",
+            0.0,
+            f"store={pt['store_bytes']/2**10:.0f}KiB "
+            f"(dense would be {pt['dense_store_bytes']/2**20:.0f}MiB) "
+            f"rows={pt['store_rows']} peak_rss={pt['peak_rss_bytes']/2**20:.0f}MiB",
+        )
+    emit(
+        "population_scale/flat_memory", 0.0,
+        f"rss_spread={spread/2**20:.0f}MiB<{dense_smallest/2**20:.0f}MiB OK",
+    )
+    emit(
+        "population_scale/bitwise", 0.0,
+        f"P={bitwise['population']} params_bitwise={bitwise['params_bitwise']} "
+        f"residual_rows_bitwise={bitwise['residual_rows_bitwise']} OK",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -2,8 +2,11 @@
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import List, Optional
+
+import jax
 
 from repro.configs import get_config
 from repro.launch.train import parse_args, run
@@ -92,3 +95,80 @@ def run_centralized(*, cfg=None, steps: int = 48, batch: int = 8, inner_lr: floa
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# --- memory measurement (used by bench_population_scale; available to all) ---
+
+
+def rss_bytes() -> int:
+    """CURRENT resident set size of this process in bytes (``VmRSS``).
+
+    Unlike ``ru_maxrss`` (a monotonic high-water mark — useless for comparing
+    phases within one process), VmRSS can go down, so sampling it around a
+    phase measures THAT phase. Falls back to ru_maxrss where /proc is absent.
+    """
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    import resource
+
+    return int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss) * 1024
+
+
+def live_device_bytes() -> int:
+    """Bytes held by live JAX device arrays (on the CPU backend this is the
+    host-side arena the federation state actually occupies)."""
+    import numpy as np
+
+    total = 0
+    for a in jax.live_arrays() if hasattr(jax, "live_arrays") else []:
+        try:
+            total += int(np.prod(a.shape)) * a.dtype.itemsize
+        except Exception:
+            pass
+    return total
+
+
+def tree_nbytes(tree) -> int:
+    """Exact bytes of a pytree of arrays/ShapeDtypeStructs (no allocation)."""
+    import numpy as np
+
+    return sum(
+        int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree_util.tree_leaves(tree)
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype")
+    )
+
+
+class PeakRss:
+    """Context manager sampling VmRSS on a background thread; ``.peak`` is the
+    max observed during the ``with`` block (bytes). Sampling at ~50 Hz catches
+    transient buffers a before/after pair would miss."""
+
+    def __init__(self, interval_s: float = 0.02):
+        self.interval_s = interval_s
+        self.peak = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self.peak = max(self.peak, rss_bytes())
+            self._stop.wait(self.interval_s)
+
+    def __enter__(self) -> "PeakRss":
+        self.peak = rss_bytes()
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+        self.peak = max(self.peak, rss_bytes())

@@ -25,6 +25,7 @@ from benchmarks import (
     bench_norm_dynamics,
     bench_outer_optimizers,
     bench_partial_participation,
+    bench_population_scale,
     bench_scaling_table,
 )
 
@@ -37,6 +38,7 @@ BENCHES = [
     ("heterogeneity", bench_heterogeneity),  # Fig 4/5, C3
     ("partial_participation", bench_partial_participation),  # Fig 6, C4
     ("async_vs_sync", bench_async_vs_sync),  # FedBuff buffer vs deadline masking
+    ("population_scale", bench_population_scale),  # flat memory in P (ISSUE 9)
     ("adaptive_control", bench_adaptive_control),  # closed-loop knob tuning
     ("outer_optimizers", bench_outer_optimizers),  # Fig 10, C5
     ("norm_dynamics", bench_norm_dynamics),  # Fig 7/8, C6

@@ -27,16 +27,21 @@ from repro.core.compression import (  # noqa: F401
 )
 from repro.core.federated import (  # noqa: F401
     FederatedConfig,
+    SparseResidualStore,
     aggregation_metrics,
     apply_aggregate,
+    apply_aggregate_partial,
     centralized_step,
+    combine_tile_metrics,
     federated_round,
     federated_round_with_uplink,
     hierarchical_mean,
     init_centralized_state,
     init_federated_state,
     init_uplink_residuals,
+    run_client_tile,
     run_clients,
+    tile_rng,
 )
 from repro.core.inner_opt import InnerOptConfig, cosine_lr, global_norm  # noqa: F401
 from repro.core.outer_opt import OuterOptConfig  # noqa: F401

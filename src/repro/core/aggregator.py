@@ -60,10 +60,15 @@ from repro.core.async_agg import (
 from repro.core.compression import Codec
 from repro.core.federated import (
     FederatedConfig,
+    SparseResidualStore,
+    apply_aggregate_partial,
+    combine_tile_metrics,
+    federated_round,
     federated_round_with_uplink,
     init_federated_state,
-    init_uplink_residuals,
+    run_client_tile,
     run_clients,
+    tile_rng,
     trace_attrs,
 )
 from repro.core.inner_opt import global_norm
@@ -213,14 +218,25 @@ class SyncAggregator(Aggregator):
           (cut only when τ_i < 1) instead of being dropped at the deadline.
       (b) weight policy — FedAvg data-size weights, scaled by τ_i/τ under
           partial progress (:func:`partial_progress_weights`).
-      (c) checkpoint schema — the state pytree (params/outer/round/rng, plus
-          the population-keyed ``uplink_residuals`` store for stateful codecs)
-          and a ``{"schema", "kind", "round"}`` manifest.
+      (c) checkpoint schema — the state pytree (params/outer/round/rng, plus a
+          sparse ``uplink_residuals`` lane for stateful codecs: the rows of
+          every ever-selected client, stacked in sorted-id order, with the id
+          list in the manifest) and a ``{"schema", "kind", "round"
+          [, "uplink_ids"]}`` manifest.
 
-    ``run_round`` drives the pure jitted kernel
-    (``federated_round_with_uplink``); weights, cohort ids and the τ-mask all
-    enter as traced arguments, so per-round participation and per-client
-    realized step counts never trigger a recompile.
+    ``run_round`` drives the pure jitted kernel (``federated_round``); weights,
+    cohort residual rows and the τ-mask all enter as traced arguments, so
+    per-round participation and per-client realized step counts never trigger
+    a recompile. Error-feedback residuals live OUTSIDE the jitted state in a
+    :class:`~repro.core.federated.SparseResidualStore` — the host gathers the
+    cohort's rows before the round and scatters the updated rows back after,
+    bitwise what the in-graph dense take/set did, with memory
+    O(#ever-selected · N) instead of O(P · N).
+
+    ``cohort_tile`` streams the cohort through the client phase ``C_tile``
+    clients at a time (two-tier aggregation: Σ wΔ per tile, ONE divide) so the
+    (C, N) delta buffer is bounded by C_tile; a single tile (C_tile == C) is
+    bitwise the flat round (tested).
     """
 
     kind = "sync"
@@ -239,6 +255,7 @@ class SyncAggregator(Aggregator):
         state: Optional[Dict[str, Any]] = None,
         shard_clients: Optional[Callable] = None,
         fused_server: bool = False,
+        cohort_tile: Optional[int] = None,
         donate: bool = True,
         tracer=None,
         controller=None,
@@ -255,15 +272,27 @@ class SyncAggregator(Aggregator):
         self.seed = seed
         self.partial_progress = pcfg.partial_progress
         self.fused_server = fused_server
-        if state is None:
-            state = init_federated_state(fed, params, rng)
-            if codec is not None and codec.stateful:
-                state["uplink_residuals"] = init_uplink_residuals(
-                    codec, params, pcfg.population
+        if cohort_tile is not None:
+            cohort_tile = int(cohort_tile)
+            if cohort_tile < 1:
+                raise ValueError(f"cohort_tile must be >= 1, got {cohort_tile}")
+            if fed.keep_inner_state:
+                raise ValueError(
+                    "cohort tiling cannot keep per-client inner state across "
+                    "rounds (the (K, ...)-shaped inner store is the memory "
+                    "term tiling removes) — drop --keep-opt or --cohort-tile"
                 )
+            if fused_server:
+                raise ValueError(
+                    "--fused-server consumes the full (C, N) delta buffer with "
+                    "pre-normalized weights, not the tiled partial-sum layout "
+                    "— drop one of --fused-server / --cohort-tile"
+                )
+        self.cohort_tile = cohort_tile
         self.donate = donate
-        # take ownership: the round jit donates the state (see _own)
-        self.state = _own(state) if donate else state
+        self.residual_store = SparseResidualStore.create(
+            codec, params if params is not None else (state or {}).get("params")
+        )
         apply_fn = None
         if fused_server:
             # deferred: kernels/fedcore imports core modules for the seam types
@@ -273,6 +302,12 @@ class SyncAggregator(Aggregator):
         self._loss_fn = loss_fn
         self._shard_clients = shard_clients
         self._apply_fn = apply_fn
+        if state is None:
+            state = init_federated_state(fed, params, rng)
+            # take ownership: the round jit donates the state (see _own)
+            self.state = _own(state) if donate else state
+        else:
+            self.restore(state, None)
         self._build_round_fn()
 
     def _build_round_fn(self) -> None:
@@ -281,27 +316,76 @@ class SyncAggregator(Aggregator):
         Called at construction and again by :meth:`apply_knobs` when the
         cohort-size knob changes: the round jit closes over ``fed`` (the
         cohort broadcast width), so a new K needs a fresh closure — XLA then
-        retraces once at the new bucketed cohort shape."""
+        retraces once at the new bucketed cohort shape.
+
+        Flat path: one jit per round — ``(state, batches, weights[, residuals]
+        [, tau])``. The cohort's error-feedback rows enter as a traced argument
+        (the host gathers them from the sparse store), NOT via an in-state
+        ``(P, ...)`` array, so the jitted computation never sees the
+        population. Tiled path (``cohort_tile``): a tile jit replayed per
+        C_tile slice plus the partial-sum server jit."""
         loss_fn, fed, codec = self._loss_fn, self.fed, self.codec
         shard_clients, apply_fn = self._shard_clients, self._apply_fn
+        stateful = codec is not None and codec.stateful
         # the aggregator exclusively owns its state pytree (params, outer
-        # lanes, rng, the residual store — and the inner states under
-        # keep_inner_state), and every round replaces it wholesale: donating it
-        # lets XLA update the params-sized lanes in place instead of
-        # double-buffering them (a no-op on backends without donation support)
-        donate_kw = {"donate_argnums": (0,)} if self.donate else {}
-        if self.partial_progress:
+        # lanes, rng — and the inner states under keep_inner_state), and every
+        # round replaces it wholesale: donating it lets XLA update the
+        # params-sized lanes in place instead of double-buffering them (a no-op
+        # on backends without donation support). The gathered residual rows are
+        # freshly stacked per round and replaced by the round's output rows, so
+        # they donate too.
+        if self.cohort_tile is not None:
+            fed_tile = replace(fed, clients_per_round=self.cohort_tile)
+            donate_kw = {"donate_argnums": (3,)} if self.donate else {}
+
+            def _tile(s, b, w, res, tau):
+                return run_client_tile(
+                    loss_fn, fed_tile, s, b, w, shard_clients=shard_clients,
+                    codec=codec, residuals=res, tau_steps=tau,
+                )
+
+            self._tile_fn = jax.jit(_tile, **donate_kw)
+            # donate the server state only: the Σ wΔ partial sums feed the
+            # pseudo-gradient metrics as well as the update, so XLA cannot
+            # alias their buffers (donating them would just warn)
+            self._apply_partial_fn = jax.jit(
+                lambda s, dsum, w, dn: apply_aggregate_partial(fed, s, dsum, w, dn),
+                **({"donate_argnums": (0,)} if self.donate else {}),
+            )
+            self._round_fn = None
+            return
+        self._tile_fn = self._apply_partial_fn = None
+        donate = (0, 3) if stateful else (0,)
+        donate_kw = {"donate_argnums": donate} if self.donate else {}
+        if self.partial_progress and stateful:
             self._round_fn = jax.jit(
-                lambda s, b, w, sel, tau: federated_round_with_uplink(
-                    loss_fn, fed, codec, s, b, client_weights=w, selected=sel,
+                lambda s, b, w, res, tau: federated_round(
+                    loss_fn, fed, s, b, client_weights=w, codec=codec,
+                    residuals=res, shard_clients=shard_clients, tau_steps=tau,
+                    apply_fn=apply_fn,
+                ),
+                **donate_kw,
+            )
+        elif self.partial_progress:
+            self._round_fn = jax.jit(
+                lambda s, b, w, tau: federated_round(
+                    loss_fn, fed, s, b, client_weights=w, codec=codec,
                     shard_clients=shard_clients, tau_steps=tau, apply_fn=apply_fn,
+                ),
+                **donate_kw,
+            )
+        elif stateful:
+            self._round_fn = jax.jit(
+                lambda s, b, w, res: federated_round(
+                    loss_fn, fed, s, b, client_weights=w, codec=codec,
+                    residuals=res, shard_clients=shard_clients, apply_fn=apply_fn,
                 ),
                 **donate_kw,
             )
         else:
             self._round_fn = jax.jit(
-                lambda s, b, w, sel: federated_round_with_uplink(
-                    loss_fn, fed, codec, s, b, client_weights=w, selected=sel,
+                lambda s, b, w: federated_round(
+                    loss_fn, fed, s, b, client_weights=w, codec=codec,
                     shard_clients=shard_clients, apply_fn=apply_fn,
                 ),
                 **donate_kw,
@@ -373,12 +457,10 @@ class SyncAggregator(Aggregator):
             t.begin("round", span_id=f"r{rid}", round=rid,
                     effective_k=float(plan.effective_k), track=0)
         w = jnp.asarray(self.round_weights(plan))
-        sel = jnp.asarray(plan.selected)
-        if self.partial_progress:
-            tau = jnp.asarray(self.tau_steps(plan), jnp.int32)
-            self.state, metrics = self._round_fn(self.state, batches, w, sel, tau)
+        if self.cohort_tile is not None:
+            metrics = self._run_round_tiled(batches, plan, w)
         else:
-            self.state, metrics = self._round_fn(self.state, batches, w, sel)
+            metrics = self._run_round_flat(batches, plan, w)
         if t.enabled:
             attrs = trace_attrs(metrics)  # the one device sync tracing pays
             t.end(f"r{rid}", **attrs)
@@ -388,18 +470,164 @@ class SyncAggregator(Aggregator):
                 t.gauge(k, v)
         return metrics
 
+    def _run_round_flat(self, batches, plan: ParticipationPlan, w) -> Dict[str, jax.Array]:
+        """One cohort-wide jitted round; host gather/scatter of the cohort's
+        error-feedback rows around it (bitwise the old in-graph dense
+        take/set — the gathered values are identical)."""
+        stateful = self.residual_store is not None
+        args = [self.state, batches, w]
+        if stateful:
+            args.append(self.residual_store.gather(plan.selected))
+        if self.partial_progress:
+            args.append(jnp.asarray(self.tau_steps(plan), jnp.int32))
+        self.state, metrics = self._round_fn(*args)
+        if stateful:
+            # `federated_round` returns the cohort's updated rows in-state;
+            # they belong in the population store, not the jitted state
+            self.residual_store.scatter(
+                plan.selected, self.state.pop("uplink_residuals")
+            )
+        return metrics
+
+    def _run_round_tiled(self, batches, plan: ParticipationPlan, w) -> Dict[str, jax.Array]:
+        """Streamed round: the cohort crosses the client phase ``cohort_tile``
+        clients at a time; each tile folds into Σ wΔ partial sums
+        (:func:`run_client_tile`), and :func:`apply_aggregate_partial` performs
+        the single server-side divide — the ``hierarchical_mean`` algebra, so
+        the (C, N) delta buffer never materializes. The last tile pads to the
+        tile width with zero-weight slots (zero batch, zero residual row);
+        pads add exact zeros everywhere and never touch the residual store.
+
+        One tile (``cohort_tile == C``) is bitwise the flat round: tile 0 runs
+        on the round's own rng lane and the partial divide/DP-noise/outer
+        sequence mirrors ``apply_aggregate`` op for op."""
+        C = self.fed.clients_per_round
+        ct = self.cohort_tile
+        n_tiles = -(-C // ct)
+        stateful = self.residual_store is not None
+        w_np = np.asarray(w, np.float32)
+        tau_np = (
+            np.asarray(self.tau_steps(plan), np.int32)
+            if self.partial_progress else None
+        )
+        w_full = np.zeros(n_tiles * ct, np.float32)
+        w_full[:C] = w_np
+        core = {"params": self.state["params"], "round": self.state["round"]}
+        base_rng = self.state["rng"]
+        delta_sum = None
+        delta_norms = []
+        tile_outs = []
+        for t_idx in range(n_tiles):
+            lo, hi = t_idx * ct, min((t_idx + 1) * ct, C)
+            n_real = hi - lo
+
+            def _pad(x, axis=0):
+                if n_real == ct:
+                    return x
+                shape = list(x.shape)
+                shape[axis] = ct - n_real
+                return jnp.concatenate(
+                    [x, jnp.zeros(shape, x.dtype)], axis=axis
+                )
+
+            b_t = jax.tree_util.tree_map(
+                lambda x: _pad(x[:, lo:hi], axis=1), batches
+            )
+            w_t = jnp.asarray(w_full[t_idx * ct:(t_idx + 1) * ct])
+            res_t = None
+            if stateful:
+                res_t = jax.tree_util.tree_map(
+                    _pad, self.residual_store.gather(plan.selected[lo:hi])
+                )
+            tau_t = None
+            if tau_np is not None:
+                # pad slots take the FULL τ (the tau_steps() discipline: their
+                # output is weight-masked anyway, and full-τ lanes keep the
+                # non-partial bitwise identity)
+                tau_t = jnp.asarray(
+                    np.concatenate(
+                        [tau_np[lo:hi],
+                         np.full(ct - n_real, self.fed.local_steps, np.int32)]
+                    )
+                )
+            s_t = dict(core, rng=tile_rng(base_rng, t_idx))
+            out = self._tile_fn(s_t, b_t, w_t, res_t, tau_t)
+            if stateful:
+                rows = out.pop("residuals")
+                self.residual_store.scatter(
+                    plan.selected[lo:hi],
+                    jax.tree_util.tree_map(lambda x: x[:n_real], rows),
+                )
+            ds = out.pop("delta_sum")
+            delta_sum = ds if delta_sum is None else jax.tree_util.tree_map(
+                jnp.add, delta_sum, ds
+            )
+            delta_norms.append(out.pop("delta_norms"))
+            tile_outs.append(out)
+        new_state, agg_metrics = self._apply_partial_fn(
+            self.state, delta_sum, jnp.asarray(w_full),
+            jnp.concatenate(delta_norms),
+        )
+        self.state = new_state
+        return dict(combine_tile_metrics(tile_outs), **agg_metrics)
+
     # --- (c) checkpoint schema -------------------------------------------
     def checkpoint(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         # a COPY, not the live state: the round jit donates self.state, so a
         # caller that serializes the checkpoint after the next round would
         # otherwise hold deleted arrays
         manifest = dict(self._manifest_header(), round=int(self.state["round"]))
+        tree = _own(self.state)
+        if self.residual_store is not None:
+            # sparse lane: every ever-selected client's row, stacked in
+            # sorted-id order; the id list rides the manifest so the load
+            # template can be sized without touching the npz
+            manifest["uplink_ids"] = self.residual_store.ids()
+            tree["uplink_residuals"] = _own(self.residual_store.stacked())
         if self.controller is not None and self.controller.enabled:
             # controller state rides the manifest (JSON floats round-trip
             # exactly); absent entirely for static/None, keeping the default
             # checkpoint byte-identical to the uncontrolled schema
             manifest["control"] = self.controller.state_dict()
-        return _own(self.state), manifest
+        return tree, manifest
+
+    def restore(self, state: Dict[str, Any], manifest: Optional[Dict[str, Any]] = None) -> None:
+        """Adopt a restored checkpoint pytree (+ its aggregator manifest).
+
+        The ``uplink_residuals`` lane is routed into the sparse store: with
+        ``manifest['uplink_ids']`` it is the sparse stacked layout; without
+        (a legacy dense checkpoint) a ``(population, ...)`` lane converts via
+        ``from_dense`` — all-zero (never-selected) rows stay unmaterialized,
+        which is how a PR-8 dense checkpoint resumes bitwise with flat memory.
+        """
+        state = dict(state)
+        res = state.pop("uplink_residuals", None)
+        stateful = self.codec is not None and self.codec.stateful
+        if res is not None and not stateful:
+            raise ValueError(
+                "restored state carries per-client error-feedback residuals "
+                "but this aggregator's codec is not stateful — pass the codec "
+                "the checkpoint was written with"
+            )
+        if res is not None:
+            params_like = state["params"]
+            ids = manifest.get("uplink_ids") if isinstance(manifest, dict) else None
+            leading = jax.tree_util.tree_leaves(res)[0].shape[0]
+            if ids is not None:
+                self.residual_store = SparseResidualStore.from_stacked(
+                    params_like, ids, res
+                )
+            elif leading == self.pcfg.population:
+                self.residual_store = SparseResidualStore.from_dense(
+                    params_like, res
+                )
+            else:
+                raise ValueError(
+                    f"uplink_residuals lane has leading dim {leading}, which "
+                    f"matches neither the manifest's uplink_ids (absent) nor "
+                    f"the dense (population={self.pcfg.population}, ...) layout"
+                )
+        self.state = _own(state) if self.donate else state
 
     @classmethod
     def checkpoint_template(
@@ -408,13 +636,23 @@ class SyncAggregator(Aggregator):
         pcfg: ParticipationConfig,
         params_like,
         codec: Optional[Codec] = None,
+        uplink_ids=None,
     ) -> Dict[str, Any]:
         """Abstract state pytree matching ``checkpoint()[0]`` — the ``like``
-        argument for ``checkpoint.load_pytree``."""
+        argument for ``checkpoint.load_pytree``.
+
+        ``uplink_ids`` (the manifest's recorded id set) sizes the sparse
+        residual lane; ``None`` falls back to the legacy dense ``(P, ...)``
+        layout. Either way the lane is ``jax.ShapeDtypeStruct`` leaves — a
+        template never allocates the store it describes."""
         state = init_federated_state(fed, params_like, jax.random.PRNGKey(0))
         if codec is not None and codec.stateful:
-            state["uplink_residuals"] = init_uplink_residuals(
-                codec, params_like, pcfg.population
+            n = pcfg.population if uplink_ids is None else len(uplink_ids)
+            state["uplink_residuals"] = jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(
+                    (n,) + tuple(p.shape), jnp.float32
+                ),
+                params_like,
             )
         return state
 
@@ -490,42 +728,50 @@ class AsyncBufferAggregator(Aggregator):
             state = dict(state)  # may carry residuals/in-flight lanes
         inflight = state.pop("inflight_params", None)
         uplink_rng = state.pop("uplink_rng", None)
-        self.residuals = state.pop("uplink_residuals", None)
-        if self.residuals is not None:
-            self.residuals = _own(self.residuals)  # _res_scatter donates the store
+        restored_res = state.pop("uplink_residuals", None)
         # take ownership of everything the admit/flush jits donate (every lane
         # but params — params is aliased by in-flight snapshots, never donated)
         self.state = dict(
             state, **_own({k: v for k, v in state.items() if k != "params"})
         )
-        if self.residuals is not None and not stateful:
+        if restored_res is not None and not stateful:
             raise ValueError(
                 "restored state carries per-client error-feedback residuals but "
                 "the driver's codec is not stateful — pass the codec the "
                 "checkpoint was written with, or strip 'uplink_residuals' to "
                 "deliberately discard the clients' accumulated feedback"
             )
-        if stateful and self.residuals is None:
-            self.residuals = init_uplink_residuals(
-                codec, self.state["params"], pcfg.population
-            )
+        # the residual store is SPARSE: an empty id→row map at a fresh start
+        # (flat memory in P — a row materializes the first time its client is
+        # dispatched), rebuilt from the checkpoint's recorded id set on resume
+        self.residuals: Optional[SparseResidualStore] = None
         if stateful:
-            # population-id gather/scatter as two tiny jits (traced cid — one
-            # compile each, reused for every completion). The (P, ...) residual
-            # store is exclusively driver-owned and replaced per scatter:
-            # donating it turns the scatter into an in-place row write instead
-            # of copying the params-sized-×-P store every completion.
-            self._res_gather = jax.jit(
-                lambda store, cid: jax.tree_util.tree_map(
-                    lambda r: r[cid][None], store
+            params_like = self.state["params"]
+            if restored_res is None:
+                self.residuals = SparseResidualStore(params_like)
+            else:
+                ids = (
+                    dispatch.get("uplink_ids")
+                    if isinstance(dispatch, dict) else None
                 )
-            )
-            self._res_scatter = jax.jit(
-                lambda store, cid, new: jax.tree_util.tree_map(
-                    lambda r, n: r.at[cid].set(n[0]), store, new
-                ),
-                donate_argnums=(0,),
-            )
+                leading = jax.tree_util.tree_leaves(restored_res)[0].shape[0]
+                if ids is not None:
+                    self.residuals = SparseResidualStore.from_stacked(
+                        params_like, ids, restored_res
+                    )
+                elif leading == pcfg.population:
+                    # legacy PR-3 dense (P, ...) layout: all-zero rows stay
+                    # unmaterialized, so the resume is bitwise AND flat-memory
+                    self.residuals = SparseResidualStore.from_dense(
+                        params_like, restored_res
+                    )
+                else:
+                    raise ValueError(
+                        f"uplink_residuals lane has leading dim {leading}, "
+                        f"which matches neither the dispatch manifest's "
+                        f"uplink_ids (absent) nor the dense "
+                        f"(population={pcfg.population}, ...) layout"
+                    )
             self._res_norm_fn = jax.jit(global_norm)
         self._bytes_per_upload = (
             float(codec.nbytes(self.state["params"])) if codec is not None
@@ -732,6 +978,23 @@ class AsyncBufferAggregator(Aggregator):
         self._busy.discard(ev.client)
         return ev, snapshot, version
 
+    # --- per-client error-feedback rows (sparse store accessors) ----------
+    @staticmethod
+    def _res_gather(store: SparseResidualStore, cid):
+        """One client's EF row as a (1, ...) tree — what the old dense
+        ``r[cid][None]`` jit returned; a never-dispatched client reads zeros
+        (the dense store's initial value, bitwise)."""
+        return jax.tree_util.tree_map(lambda r: r[None], store.row(int(cid)))
+
+    @staticmethod
+    def _res_scatter(store: SparseResidualStore, cid, new):
+        """Write a client's updated (1, ...) row back, materializing it on
+        first touch; returns the store (the old donating-jit calling
+        convention, so the drivers' ``self.residuals = _res_scatter(...)``
+        call sites read identically)."""
+        store.scatter([int(cid)], new)
+        return store
+
     # --- (a)/(b): admission + weight policy -------------------------------
     def event_weight(self, ev) -> float:
         """Pre-discount credit of a completion: the plan's FedAvg weight,
@@ -842,28 +1105,36 @@ class AsyncBufferAggregator(Aggregator):
     # --- (c) canonical checkpoint schema ----------------------------------
     def checkpoint_state(self) -> Dict[str, Any]:
         """Server state + the per-client error-feedback store as ONE pytree
-        with a fixed structure (the legacy PR-3 schema — a strict subset of
-        :meth:`checkpoint`, kept for buffer-only round-trips). Returns a COPY:
-        the admit/flush jits donate the non-params lanes and ``_res_scatter``
-        donates the residual store, so a checkpoint held past the next event
-        must not alias them."""
+        with a fixed structure (the legacy PR-3 schema, kept for buffer-only
+        round-trips): the residual lane is the DENSE ``(P, ...)`` expansion of
+        the sparse store — use :meth:`checkpoint` for the population-scale
+        sparse lane. Returns a COPY: the admit/flush jits donate the non-params
+        lanes, so a checkpoint held past the next event must not alias them."""
         if self.residuals is None:
             return _own(self.state)
-        return _own(dict(self.state, uplink_residuals=self.residuals))
+        return dict(
+            _own(self.state),
+            uplink_residuals=self.residuals.to_dense(self.pcfg.population),
+        )
 
     def checkpoint(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         """The canonical resumable checkpoint: ``(state_pytree, manifest)``.
 
-        The pytree extends :meth:`checkpoint_state` with ``inflight_params``
-        (the K in-flight slots' params snapshots, stacked ``(K, ...)`` in
-        manifest slot order) and, with a codec, the run's ``uplink_rng`` lane.
-        The manifest carries the host floats that must round-trip exactly
-        (finish times, sim clock) plus the dispatch cursor and per-slot
-        ``(index, version)`` tags — everything else about an in-flight event
-        is recomputed from the pure timeline at restore.
+        The pytree holds the server state, the SPARSE error-feedback lane (the
+        ever-dispatched clients' rows stacked in sorted-id order — the id list
+        rides the manifest as ``uplink_ids``, never a dense ``(P, ...)``
+        expansion), ``inflight_params`` (the K in-flight slots' params
+        snapshots, stacked ``(K, ...)`` in manifest slot order) and, with a
+        codec, the run's ``uplink_rng`` lane. The manifest carries the host
+        floats that must round-trip exactly (finish times, sim clock) plus the
+        dispatch cursor and per-slot ``(index, version)`` tags — everything
+        else about an in-flight event is recomputed from the pure timeline at
+        restore.
         """
         entries = sorted(self._heap)  # (finish, index, ...): deterministic order
-        tree = dict(self.checkpoint_state())
+        tree = _own(self.state)
+        if self.residuals is not None:
+            tree["uplink_residuals"] = _own(self.residuals.stacked())
         snaps = [
             snap if snap is not None else self.state["params"]  # non-completing
             for _, _, _, snap, _ in entries                     # slot: unused filler
@@ -885,6 +1156,8 @@ class AsyncBufferAggregator(Aggregator):
                 for finish, index, _, _, ver in entries
             ],
         )
+        if self.residuals is not None:
+            manifest["uplink_ids"] = self.residuals.ids()
         if self.controller is not None and self.controller.enabled:
             # controller state rides the manifest (JSON floats round-trip
             # exactly); absent entirely for static/None, keeping the default
@@ -936,17 +1209,30 @@ class AsyncBufferAggregator(Aggregator):
         pcfg: ParticipationConfig,
         params_like,
         codec: Optional[Codec] = None,
+        uplink_ids=None,
     ) -> Dict[str, Any]:
         """Abstract state pytree matching ``checkpoint()[0]`` — the ``like``
-        argument for ``checkpoint.load_pytree`` when resuming."""
+        argument for ``checkpoint.load_pytree`` when resuming.
+
+        ``uplink_ids`` (the dispatch manifest's recorded id set) sizes the
+        sparse residual lane; ``None`` falls back to the legacy dense
+        ``(P, ...)`` layout. Both it and the in-flight lane are built as
+        ``jax.ShapeDtypeStruct`` leaves — a template never allocates the
+        stores it describes (at P=100k the dense fallback would otherwise
+        materialize P params-sized rows just to name their shapes)."""
         state = init_async_state(fed, acfg, params_like, jax.random.PRNGKey(0))
         if codec is not None and codec.stateful:
-            state["uplink_residuals"] = init_uplink_residuals(
-                codec, params_like, pcfg.population
+            n = pcfg.population if uplink_ids is None else len(uplink_ids)
+            state["uplink_residuals"] = jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(
+                    (n,) + tuple(p.shape), jnp.float32
+                ),
+                params_like,
             )
         K = pcfg.clients_per_round
         state["inflight_params"] = jax.tree_util.tree_map(
-            lambda p: jnp.zeros((K,) + p.shape, p.dtype), params_like
+            lambda p: jax.ShapeDtypeStruct((K,) + tuple(p.shape), p.dtype),
+            params_like,
         )
         if codec is not None:
             state["uplink_rng"] = jax.random.PRNGKey(0)

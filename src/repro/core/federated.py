@@ -37,6 +37,14 @@ builds the (P, ...) store and :func:`federated_round_with_uplink` gathers the
 round's cohort rows and scatters them back, masked so a client that did not
 upload keeps its residual untouched.
 
+Population scale (P ≈ 100k and beyond) removes both dense memory terms behind
+the same seams: :class:`SparseResidualStore` keeps EF rows only for clients that
+were ever selected (bitwise the dense store through its gather/scatter
+contract), and :func:`run_client_tile` + :func:`apply_aggregate_partial` stream
+a large cohort through fixed-size C_tile tiles, folding each tile into weighted
+partial sums (the :func:`hierarchical_mean` algebra: Σ wΔ per tile, ONE divide
+at the server) — bitwise the flat round when C_tile == C.
+
 The same functions drive the single-host simulator (tests, benchmarks) and the
 multi-pod dry-run (launch/dryrun.py); only the jit shardings differ.
 """
@@ -47,6 +55,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.compression import Codec
 from repro.core.inner_opt import (
@@ -638,6 +647,151 @@ def init_uplink_residuals(codec: Optional[Codec], params, population: int):
     )
 
 
+class SparseResidualStore:
+    """Population-keyed error-feedback store that materializes rows ONLY for
+    clients that have ever sat in a cohort — the flat-memory replacement for the
+    dense ``(P, ...)`` array :func:`init_uplink_residuals` builds.
+
+    The store is a host-side ``id → row`` map (each row a params-shaped float32
+    pytree, no leading axis). Its observable semantics are bitwise the dense
+    store's: a dense store starts all-zero, so gathering a never-materialized id
+    returns the same zero row ``jnp.take`` would, and scattering a cohort's rows
+    back writes the same values ``r.at[sel].set(n)`` would. Memory, however, is
+    ``O(#ever-selected · N)`` instead of ``O(P · N)`` — at P=100k with a small
+    ever-selected set the dense store is never allocated at all.
+
+    Checkpointing: :meth:`stacked` emits the rows as one ``(n_ids, ...)`` pytree
+    in sorted-id order (the manifest records the id list); :meth:`to_dense`
+    reproduces the legacy PR-3 dense layout; :meth:`from_dense` ingests a legacy
+    dense checkpoint, leaving all-zero rows unmaterialized (indistinguishable
+    through ``gather``).
+    """
+
+    def __init__(self, params_like):
+        self._template = jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(tuple(p.shape), jnp.float32), params_like
+        )
+        self._rows: Dict[int, Any] = {}
+
+    @classmethod
+    def create(cls, codec: Optional[Codec], params) -> Optional["SparseResidualStore"]:
+        """``None`` for stateless codecs — mirrors :func:`init_uplink_residuals`."""
+        if codec is None or not codec.stateful:
+            return None
+        return cls(params)
+
+    # ---- row accounting ----
+
+    def ids(self):
+        """Sorted population ids that own a materialized row."""
+        return sorted(self._rows)
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def __contains__(self, cid) -> bool:
+        return int(cid) in self._rows
+
+    @property
+    def row_nbytes(self) -> int:
+        return sum(
+            int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+            for s in jax.tree_util.tree_leaves(self._template)
+        )
+
+    @property
+    def nbytes(self) -> int:
+        """Exact bytes held: rows × params size. The dense equivalent is P × params."""
+        return len(self._rows) * self.row_nbytes
+
+    def _zero_row(self):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self._template
+        )
+
+    def row(self, cid):
+        """One client's row; never-materialized ids read as the zero row."""
+        cid = int(cid)
+        if cid in self._rows:
+            return self._rows[cid]
+        return self._zero_row()
+
+    # ---- the gather/scatter contract the round functions use ----
+
+    def gather(self, ids):
+        """Stacked ``(C, ...)`` cohort rows for ``plan.selected`` — bitwise what
+        ``jnp.take(dense, sel, axis=0)`` returns (unmaterialized ids are zero)."""
+        rows = [self.row(i) for i in np.asarray(ids).tolist()]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *rows)
+
+    def scatter(self, ids, stacked, mask=None) -> None:
+        """Write a cohort's updated rows back, materializing on first touch.
+
+        ``mask[k]`` False marks slot ``k`` as a tile PADDING slot (not a real
+        cohort member) and skips it, so padding never materializes a row. Real
+        cohort members always materialize — including zero-weight (dropped /
+        straggling) ones, whose rows come back bitwise unchanged from
+        ``run_clients``; that matches the dense scatter, which also writes their
+        unchanged rows back.
+        """
+        for k, cid in enumerate(np.asarray(ids).tolist()):
+            if mask is not None and not bool(mask[k]):
+                continue
+            self._rows[int(cid)] = jax.tree_util.tree_map(lambda x: x[k], stacked)
+
+    # ---- checkpoint lanes ----
+
+    def stacked(self):
+        """All rows as one ``(n_ids, ...)`` pytree in sorted-id order (the canonical
+        checkpoint lane; pair with :meth:`ids` in the manifest)."""
+        ids = self.ids()
+        if not ids:
+            return jax.tree_util.tree_map(
+                lambda s: jnp.zeros((0,) + tuple(s.shape), s.dtype), self._template
+            )
+        rows = [self._rows[i] for i in ids]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *rows)
+
+    def to_dense(self, population: int):
+        """Materialize the legacy dense ``(P, ...)`` layout (PR-3 schema)."""
+        dense = jax.tree_util.tree_map(
+            lambda s: jnp.zeros((population,) + tuple(s.shape), s.dtype),
+            self._template,
+        )
+        ids = self.ids()
+        if not ids:
+            return dense
+        sel = jnp.asarray(ids, jnp.int32)
+        return jax.tree_util.tree_map(
+            lambda d, s: d.at[sel].set(s), dense, self.stacked()
+        )
+
+    @classmethod
+    def from_stacked(cls, params_like, ids, stacked) -> "SparseResidualStore":
+        """Rebuild from the canonical checkpoint lane (manifest ids + stacked rows)."""
+        store = cls(params_like)
+        for k, cid in enumerate(int(i) for i in ids):
+            store._rows[cid] = jax.tree_util.tree_map(lambda x: jnp.asarray(x[k]), stacked)
+        return store
+
+    @classmethod
+    def from_dense(cls, params_like, dense) -> "SparseResidualStore":
+        """Ingest a legacy dense ``(P, ...)`` store. All-zero rows stay
+        unmaterialized — a zero row and no row are indistinguishable through
+        :meth:`gather`, so the conversion is semantics-preserving."""
+        store = cls(params_like)
+        leaves = [np.asarray(l) for l in jax.tree_util.tree_leaves(dense)]
+        population = leaves[0].shape[0]
+        owned = np.zeros(population, dtype=bool)
+        for leaf in leaves:
+            owned |= leaf.reshape(population, -1).any(axis=1)
+        for cid in np.nonzero(owned)[0].tolist():
+            store._rows[int(cid)] = jax.tree_util.tree_map(
+                lambda x: jnp.asarray(x[cid]), dense
+            )
+        return store
+
+
 def federated_round_with_uplink(
     loss_fn: Callable,
     fed: FederatedConfig,
@@ -688,6 +842,201 @@ def federated_round_with_uplink(
 
 
 # ---------------------------------------------------------------------------
+# Streamed cohorts: tile client phase + partial-sum server phase
+# ---------------------------------------------------------------------------
+#
+# A large cohort C is streamed through the jitted client phase in fixed-size
+# tiles of C_tile clients, and the tiles fold into the round via the
+# `hierarchical_mean` algebra: each tile forwards Σ_k w_k Δ_k (and its decoded
+# per-client delta norms), the server accumulates the tile sums, and divides by
+# Σ w ONCE in `apply_aggregate_partial`. The (C, N) delta buffer and the
+# (C,)-batched client state are therefore bounded by C_tile regardless of C.
+# With one tile (C_tile == C) the op sequence is exactly
+# `_weighted_mean_clients` split across two jits — bitwise the flat round.
+
+
+#: rng stream tag for tiles t > 0 — tile 0 keeps state['rng'] untouched so the
+#: single-tile round is bitwise the flat round, rng-consuming codecs included.
+TILE_RNG_TAG = 0x7113
+
+
+def tile_rng(rng: jax.Array, tile_index: int) -> jax.Array:
+    """Per-tile rng lane: tile 0 is the round rng itself (the bitwise identity);
+    later tiles fold in a tagged tile index so their codec encode keys are
+    decorrelated from each other and from the server's DP-noise lane."""
+    if tile_index == 0:
+        return rng
+    return jax.random.fold_in(rng, TILE_RNG_TAG + tile_index)
+
+
+def run_client_tile(
+    loss_fn: Callable,
+    fed: FederatedConfig,  # clients_per_round == C_tile
+    state: Dict[str, Any],  # needs 'params', 'round', 'rng' (a per-tile rng lane)
+    batches: Dict[str, jax.Array],  # leaves (τ, C_tile, ...)
+    client_weights: jax.Array,  # (C_tile,) — REQUIRED (pads carry weight 0)
+    shard_clients: Optional[Callable] = None,
+    codec: Optional[Codec] = None,
+    residuals: Optional[Any] = None,  # (C_tile, ...) cohort error-feedback rows
+    tau_steps: Optional[jax.Array] = None,  # (C_tile,) int32
+) -> Dict[str, Any]:
+    """One cohort TILE of a streamed round: :func:`run_clients` on ``C_tile``
+    clients, folded to weighted partial sums. Pure — jit it once and replay it
+    over every tile of every round.
+
+    Returns a dict of partial results:
+
+    - ``delta_sum``  — Σ_k w_k Δ_k over the tile (decoded), the island-style
+      partial numerator of the weighted mean (``hierarchical_mean`` algebra).
+    - ``delta_norms`` — (C_tile,) decoded per-client delta norms (for
+      :func:`aggregation_metrics`, concatenated across tiles).
+    - ``residuals`` / ``uplink_residual_norm`` — updated EF rows (stateful codecs).
+    - ``eff_k`` + the :func:`run_clients` telemetry pieces, recombined across
+      tiles by :func:`combine_tile_metrics`.
+
+    The partial numerator uses the exact op sequence of
+    ``_weighted_mean_clients`` (``jnp.sum(_weigh_clients(x, w), axis=0)``), and
+    :func:`apply_aggregate_partial` performs the identical final divide — with a
+    single tile the round is bitwise :func:`federated_round`.
+    """
+    if fed.keep_inner_state:
+        raise ValueError(
+            "streamed cohorts cannot keep per-client inner state across rounds "
+            "(the (C,)-batched inner store is exactly the memory term tiling "
+            "removes); use keep_inner_state=False"
+        )
+    deltas, aux = run_clients(
+        loss_fn, fed, state, batches,
+        client_weights=client_weights, shard_clients=shard_clients,
+        codec=codec, residuals=residuals, tau_steps=tau_steps,
+    )
+    if codec is not None:
+        deltas = jax.vmap(codec.decode)(deltas)
+    w = client_weights.astype(jnp.float32)
+    out = {
+        "delta_sum": jax.tree_util.tree_map(
+            lambda x: jnp.sum(_weigh_clients(x, w), axis=0), deltas
+        ),
+        "delta_norms": jax.vmap(global_norm)(deltas),
+        "eff_k": jnp.sum((w > 0).astype(jnp.float32)),
+        "step_metrics": aux["step_metrics"],
+        "client_model_norm_mean": aux["client_model_norm_mean"],
+        "avg_client_model_norm": aux["avg_client_model_norm"],
+    }
+    if "residuals" in aux:
+        out["residuals"] = aux["residuals"]
+        out["uplink_residual_norm"] = aux["uplink_residual_norm"]
+    return out
+
+
+def apply_aggregate_partial(
+    fed: FederatedConfig,
+    state: Dict[str, Any],  # needs 'params', 'outer', 'round', 'rng'
+    delta_sum,  # pytree — Σ over ALL tiles of Σ_k w_k Δ_k (no client axis)
+    client_weights: jax.Array,  # (C_total,) full-cohort weights (pads at w=0)
+    delta_norms: jax.Array,  # (C_total,) decoded per-client delta norms
+) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    """Server phase of a streamed round: the ONE divide of the two-tier
+    aggregation, then DP noise and the outer update — :func:`apply_aggregate`
+    with the weighted mean's numerator precomputed by the tiles.
+
+    Mirrors ``apply_aggregate`` operation for operation (same rng split, same
+    elastic DP-noise scale, same metrics formulas), so a single-tile round is
+    bitwise the flat round. Zero-weight padding slots are invisible: they add
+    exact zeros to ``delta_sum``, nothing to Σw / max(w), and
+    :func:`aggregation_metrics` masks them out via ``w > 0``.
+    """
+    w = client_weights.astype(jnp.float32)
+    w_sum = _safe_weight_sum(w)
+    pseudo_grad = jax.tree_util.tree_map(
+        lambda s: s / w_sum.astype(s.dtype), delta_sum
+    )
+
+    rng, noise_rng = jax.random.split(state["rng"])
+    if fed.dp_noise > 0.0:
+        scale = fed.dp_noise * jnp.max(w) / jnp.maximum(jnp.sum(w), 1e-12)
+        leaves, treedef = jax.tree_util.tree_flatten(pseudo_grad)
+        keys = jax.random.split(noise_rng, len(leaves))
+        leaves = [
+            l + scale * jax.random.normal(k, l.shape, l.dtype)
+            for l, k in zip(leaves, keys)
+        ]
+        pseudo_grad = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    new_global, new_outer = outer_update(
+        fed.outer, state["params"], pseudo_grad, state["outer"]
+    )
+    metrics = dict(
+        aggregation_metrics(delta_norms, global_norm(pseudo_grad), client_weights),
+        global_model_norm=global_norm(new_global),
+    )
+    new_state = {
+        "params": new_global,
+        "outer": new_outer,
+        "round": state["round"] + 1,
+        "rng": rng,
+    }
+    return new_state, metrics
+
+
+def combine_tile_metrics(tile_outs) -> Dict[str, jax.Array]:
+    """Fold per-tile client telemetry into :func:`federated_round`'s metric dict
+    (everything except the ``apply_aggregate_partial`` server metrics).
+
+    One tile: passed through verbatim (bitwise the flat round's assembly). More
+    tiles: each tile's participation-weighted means recombine weighted by its
+    effective client count — exact algebra for the per-step scalar series (which
+    are already Σ v·part/eff within the tile), a documented approximation for
+    ``avg_client_model_norm`` and ``uplink_residual_norm`` (norms of means do
+    not decompose across tiles; these are monitoring-only quantities)."""
+    if len(tile_outs) == 1:
+        t = tile_outs[0]
+        sm = t["step_metrics"]
+        out = {
+            "train_loss": sm["loss"][-1],
+            "train_loss_mean": jnp.mean(sm["loss"]),
+            "client_grad_norm": sm["grad_norm"][-1],
+            "applied_update_norm": sm["applied_update_norm"][-1],
+            "lr": sm["lr"][-1],
+            "client_model_norm_mean": t["client_model_norm_mean"],
+            "avg_client_model_norm": t["avg_client_model_norm"],
+        }
+        if "uplink_residual_norm" in t:
+            out["uplink_residual_norm"] = t["uplink_residual_norm"]
+        return out
+
+    eff = jnp.stack([t["eff_k"].astype(jnp.float32) for t in tile_outs])
+    tile_w = eff / jnp.maximum(jnp.sum(eff), 1.0)  # all-pad tiles weigh 0
+
+    def fold(vals):
+        v = jnp.stack(vals)
+        return jnp.sum(v * tile_w.reshape((-1,) + (1,) * (v.ndim - 1)), axis=0)
+
+    sm = {
+        k: fold([t["step_metrics"][k] for t in tile_outs])
+        for k in tile_outs[0]["step_metrics"]
+    }
+    out = {
+        "train_loss": sm["loss"][-1],
+        "train_loss_mean": jnp.mean(sm["loss"]),
+        "client_grad_norm": sm["grad_norm"][-1],
+        "applied_update_norm": sm["applied_update_norm"][-1],
+        "lr": sm["lr"][-1],
+        "client_model_norm_mean": fold(
+            [t["client_model_norm_mean"] for t in tile_outs]
+        ),
+        "avg_client_model_norm": fold(
+            [t["avg_client_model_norm"] for t in tile_outs]
+        ),
+    }
+    if "uplink_residual_norm" in tile_outs[0]:
+        out["uplink_residual_norm"] = fold(
+            [t["uplink_residual_norm"] for t in tile_outs]
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Centralized baseline (paper's comparison target)
 # ---------------------------------------------------------------------------
 
@@ -735,25 +1084,47 @@ def hierarchical_mean(deltas, n_groups: int, weights: Optional[jax.Array] = None
 
     With ``weights`` (C,) each island forwards Σ_k w_k Δ_k and Σ_k w_k; the server
     divides once — algebraically identical to the weighted flat mean, so elastic
-    participation composes with sub-federation for free."""
+    participation composes with sub-federation for free.
 
-    def two_level(x):
-        c = x.shape[0]
-        assert c % n_groups == 0, (c, n_groups)
-        grouped = x.reshape(n_groups, c // n_groups, *x.shape[1:])
-        partial = jnp.mean(grouped, axis=1)  # within-island partial aggregation
-        return jnp.mean(partial, axis=0)  # server aggregation of island results
+    Uneven islands: when ``C % n_groups != 0`` the weighted form zero-pads the
+    client axis up to the next multiple — a pad slot carries weight 0 and a zero
+    delta, so the partial sums are untouched (0·0 = 0 is exact in fp) and the
+    final divide uses the REAL weight mass only. The unweighted form has no way
+    to mark a pad as absent (every slot counts 1/C) and raises ``ValueError``
+    instead — a real error, not a bare ``assert`` that vanishes under
+    ``python -O``."""
+
+    def _check_divisible(c: int):
+        if c % n_groups != 0:
+            raise ValueError(
+                f"client axis of size {c} does not divide into {n_groups} equal "
+                "groups; pass weights= to use the zero-weight padding path"
+            )
 
     if weights is None:
+
+        def two_level(x):
+            _check_divisible(x.shape[0])
+            grouped = x.reshape(n_groups, x.shape[0] // n_groups, *x.shape[1:])
+            partial = jnp.mean(grouped, axis=1)  # within-island partial aggregation
+            return jnp.mean(partial, axis=0)  # server aggregation of island results
+
         return jax.tree_util.tree_map(two_level, deltas)
 
     w = weights.astype(jnp.float32)
-    w_sum = _safe_weight_sum(w)
+    w_sum = _safe_weight_sum(w)  # real clients only — pads never enter the divide
+    c = int(w.shape[0])
+    pad = (-c) % n_groups
+    w_padded = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)]) if pad else w
 
     def two_level_weighted(x):
-        c = x.shape[0]
-        assert c % n_groups == 0, (c, n_groups)
-        grouped = _weigh_clients(x, w).reshape(n_groups, c // n_groups, *x.shape[1:])
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0
+            )
+        grouped = _weigh_clients(x, w_padded).reshape(
+            n_groups, (c + pad) // n_groups, *x.shape[1:]
+        )
         partial = jnp.sum(grouped, axis=1)  # within-island weighted partial sums
         return jnp.sum(partial, axis=0) / w_sum.astype(x.dtype)
 

@@ -48,6 +48,12 @@ def main() -> None:
                          "lowering keeps the reference phase (the fused kernel "
                          "is the aggregator-host path), so this asserts the "
                          "flag cannot perturb shardings or footprint")
+    ap.add_argument("--cohort-tile", type=int, default=None,
+                    help="lower the federated step as ONE TILE of a streamed "
+                         "cohort (run_client_tile, client width = tile): the "
+                         "population/cohort sizes never enter the lowering, "
+                         "so per-device memory is flat in P (asserted by the "
+                         "slow dry-run test)")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="", help="suffix for result filenames (perf iters)")
     args = ap.parse_args()
@@ -104,6 +110,7 @@ def main() -> None:
                                 topk_fraction=args.topk_fraction,
                                 partial_progress=args.partial_progress,
                                 fused_server=args.fused_server,
+                                cohort_tile=args.cohort_tile,
                             )
                         with mesh:
                             step = build_step(cfg, shape_name, mesh, **kw)

@@ -25,6 +25,7 @@ from repro.core import (
     federated_round,
     get_codec,
     init_uplink_residuals,
+    run_client_tile,
 )
 from repro.core.outer_opt import init_outer_state
 from repro.models import build_model
@@ -255,6 +256,7 @@ def build_train_step(
     topk_fraction: float = 0.05,
     partial_progress: bool = False,
     fused_server: bool = False,
+    cohort_tile: Optional[int] = None,
 ) -> BuiltStep:
     model = build_model(cfg)
     loss_fn = lambda p, b: model.loss(p, b, remat=remat)
@@ -309,6 +311,101 @@ def build_train_step(
 
             apply_fn = fused_apply_aggregate
         batches = input_specs(cfg, shape, mesh, tau_lowered=tau_lowered, mode="federated")
+
+        if cohort_tile is not None:
+            # streamed-cohort lowering: the compiled unit is ONE TILE of the
+            # round (run_client_tile), client width = cohort_tile. The host
+            # loop replays it over every tile and folds the weighted partial
+            # sums (docs/aggregation.md), so per-device memory is bounded by
+            # the tile — the population P and the cohort C never enter the
+            # lowering at all. The tile's client dim shards over the same
+            # client axes as the flat round.
+            if not elastic:
+                raise ValueError("cohort tiling requires the elastic round: "
+                                 "pad slots ride as zero-weight clients")
+            if fused_server:
+                raise ValueError(
+                    "--fused-server consumes the full (C, N) delta buffer "
+                    "with pre-normalized weights, not the tiled partial-sum "
+                    "layout"
+                )
+            client_width = int(
+                _np.prod([mesh.shape[a] for a in client_ax])
+            ) if client_ax else 1
+            if cohort_tile % client_width:
+                raise ValueError(
+                    f"cohort_tile={cohort_tile} must be a multiple of the "
+                    f"mesh client-axis width {client_width} (axes "
+                    f"{list(client_ax)}): jit inputs reject uneven GSPMD "
+                    f"padding on the sharded client dim"
+                )
+            fed_tile = replace(fed, clients_per_round=cohort_tile)
+
+            def _retile(sds):
+                return jax.ShapeDtypeStruct(
+                    (sds.shape[0], cohort_tile) + sds.shape[2:],
+                    sds.dtype, sharding=sds.sharding,
+                )
+
+            batches = jax.tree_util.tree_map(
+                _retile, batches,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            )
+            # run_client_tile reads only the params/round/rng lanes; the outer
+            # optimizer state stays host-side with apply_aggregate_partial
+            tile_state = {k: state[k] for k in ("params", "round", "rng")}
+            args = (tile_state, batches,
+                    _sds((cohort_tile,), jnp.float32, mesh, P()))
+            arg_names = ["client_weights"]
+            if stateful:
+                res_shapes = jax.eval_shape(
+                    lambda: init_uplink_residuals(
+                        codec, model.init(jax.random.PRNGKey(0)), cohort_tile
+                    )
+                )
+                args = args + (_tree_sds(res_shapes, client_pspecs, mesh),)
+                arg_names.append("residuals")
+            if partial_progress:
+                args = args + (_sds((cohort_tile,), jnp.int32, mesh, P()),)
+                arg_names.append("tau_steps")
+
+            def _tile(s, b, w, *rest):
+                kw = dict(zip(arg_names[1:], rest))
+                return run_client_tile(
+                    loss_fn, fed_tile, s, b, w,
+                    shard_clients=shard_clients, codec=codec, **kw,
+                )
+
+            # the server state is NOT donated (every tile of the round reads
+            # the same params snapshot); the tile's residual rows are replaced
+            # wholesale, so they are
+            donate = ()
+            if "residuals" in arg_names:
+                donate = (2 + arg_names.index("residuals"),)
+            step = jax.jit(_tile, donate_argnums=donate)
+            tokens_per_tile = tau_lowered * cohort_tile * (
+                shape.global_batch // C) * shape.seq_len
+            mf = 6.0 * cfg.active_param_count() * tokens_per_tile
+            return BuiltStep(
+                name=f"{cfg.name}:{shape.name}:federated-tile",
+                fn=step,
+                args=args,
+                model_flops=mf,
+                meta={
+                    "tau_lowered": tau_lowered,
+                    "tokens_per_call": tokens_per_tile,
+                    "clients": cohort_tile,
+                    "cohort_tile": cohort_tile,
+                    "grad_accum": ga,
+                    "client_axes": list(client_ax),
+                    "fsdp_axes": list(fsdp_ax),
+                    "elastic": elastic,
+                    "uplink": uplink,
+                    "partial_progress": partial_progress,
+                    "fused_server": False,
+                    "fused_server_requested": fused_server,
+                },
+            )
         # elastic participation on the mesh: the (C,) weight vector enters the
         # jitted round as a replicated traced input — dropouts / stragglers /
         # K_eff < C on the production mesh never trigger a recompile, exactly

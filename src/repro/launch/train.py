@@ -291,6 +291,15 @@ def parse_args(argv=None):
              "jnp reference path, bitwise-unchanged",
     )
     ap.add_argument(
+        "--cohort-tile", type=int, default=None,
+        help="sync: stream the cohort through the round in fixed-size tiles "
+             "of this many clients, folding each tile into weighted partial "
+             "sums (two-tier aggregation, docs/aggregation.md) so the (C, N) "
+             "delta buffer is bounded by the tile size regardless of cohort "
+             "size. Bitwise the flat round when the tile equals --clients. "
+             "Incompatible with --fused-server and --keep-opt",
+    )
+    ap.add_argument(
         "--participation", default="uniform", choices=["uniform", "dirichlet", "markov"],
         help="client-availability model: uniform sampling, Dirichlet popularity "
              "skew, or per-client Markov on/off churn",
@@ -468,6 +477,13 @@ def run(args, cfg=None) -> dict:
             "IS the buffered-aggregation event loop (docs/runtime.md)"
         )
     if args.aggregation == "async":
+        if args.cohort_tile:
+            raise SystemExit(
+                "--cohort-tile applies to --aggregation sync only: the async "
+                "path already streams one client delta at a time into the "
+                "buffer, so its memory is bounded by the buffer size M, not "
+                "the cohort"
+            )
         if args.keep_opt:
             raise SystemExit(
                 "--keep-opt with --aggregation async is not supported: async "
@@ -492,6 +508,7 @@ def run(args, cfg=None) -> dict:
     agg = SyncAggregator(
         loss_fn, fed, pcfg, codec=codec, seed=args.seed,
         partial_progress=args.partial_progress, fused_server=args.fused_server,
+        cohort_tile=args.cohort_tile,
         params=params, rng=jax.random.PRNGKey(args.seed + 1),
         tracer=tracer, controller=controller,
     )
@@ -519,8 +536,19 @@ def run(args, cfg=None) -> dict:
                     SyncAggregator.validate_manifest(agg_man, "sync")
                 except ValueError as e:
                     raise SystemExit(f"--resume: {e}")
+            # the load template comes from the checkpoint schema, not from
+            # agg.state: the residual lane is sized by the manifest's recorded
+            # id set (sparse checkpoints) or by the population (legacy dense
+            # checkpoints) — either way nothing population-sized is allocated
+            like = SyncAggregator.checkpoint_template(
+                fed, pcfg, params, codec,
+                uplink_ids=(
+                    agg_man.get("uplink_ids")
+                    if isinstance(agg_man, dict) else None
+                ),
+            )
             try:
-                state, manifest = ckpt.load_server(latest, agg.state)
+                state, manifest = ckpt.load_server(latest, like)
             except KeyError as e:
                 raise SystemExit(
                     f"--resume: checkpoint round {latest} does not carry the "
@@ -557,7 +585,7 @@ def run(args, cfg=None) -> dict:
                     clients_per_round=int(knobs["clients_per_round"]),
                     deadline=knobs["deadline"],
                 ))
-            agg.state = state
+            agg.restore(state, agg_man if isinstance(agg_man, dict) else None)
             start_round = latest + 1
             for i, s in enumerate(streams):
                 try:
@@ -800,7 +828,8 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
                     buffer_size=int(knobs["buffer_size"]),
                 )
             like = AsyncBufferAggregator.checkpoint_template(
-                fed, acfg, pcfg, params, codec
+                fed, acfg, pcfg, params, codec,
+                uplink_ids=dispatch.get("uplink_ids"),
             )
             state, _ = ckpt.load_server(latest, like)
             start_update = latest + 1

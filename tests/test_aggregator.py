@@ -343,14 +343,30 @@ def test_sync_aggregator_checkpoint_schema_roundtrip(tmp_path):
     agg.run_round(make_batches(tau, c), plan)
     tree, manifest = agg.checkpoint()
     assert manifest["kind"] == "sync" and manifest["round"] == 1
+    # the residual lane is sparse: one row per ever-selected client, with the
+    # id set recorded in the manifest (never a dense (P, ...) expansion)
+    assert manifest["uplink_ids"] == agg.residual_store.ids()
+    assert jax.tree_util.tree_leaves(tree["uplink_residuals"])[0].shape[0] == len(
+        manifest["uplink_ids"]
+    )
     ckpt = CheckpointManager(str(tmp_path))
     ckpt.save_server(0, tree, extra={"aggregator": manifest})
     like = SyncAggregator.checkpoint_template(
-        fed, agg.pcfg, make_params(), codec=TopKCodec(k_fraction=0.5)
+        fed, agg.pcfg, make_params(), codec=TopKCodec(k_fraction=0.5),
+        uplink_ids=manifest["uplink_ids"],
     )
     restored, man = ckpt.load_server(0, like)
     _assert_trees_equal(tree, restored)
     assert man["extra"]["aggregator"] == manifest
+
+    # restore() routes the sparse lane back into an equivalent store
+    agg2 = SyncAggregator(
+        quad_loss, fed, agg.pcfg, codec=TopKCodec(k_fraction=0.5), seed=0,
+        params=make_params(), partial_progress=True,
+    )
+    agg2.restore(restored, man["extra"]["aggregator"])
+    assert agg2.residual_store.ids() == agg.residual_store.ids()
+    _assert_trees_equal(agg2.residual_store.stacked(), agg.residual_store.stacked())
 
 
 # ---------------------------------------------------------------------------
@@ -433,7 +449,8 @@ def test_async_kill_and_resume_is_bitwise_uninterrupted(tmp_path, codec, partial
     ckpt.save_server(2, tree, extra={"aggregator": manifest})
 
     like = AsyncBufferAggregator.checkpoint_template(
-        fed, acfg, pcfg, make_params(), codec
+        fed, acfg, pcfg, make_params(), codec,
+        uplink_ids=manifest.get("uplink_ids"),
     )
     restored, man = ckpt.load_server(2, like)
     assert man["extra"]["aggregator"] == manifest  # JSON floats exact
@@ -477,15 +494,28 @@ def test_async_resume_refuses_wrong_manifest():
 
 def test_async_checkpoint_keeps_legacy_subset():
     """checkpoint() extends checkpoint_state() — the PR-3 buffer round-trip
-    schema stays a strict subset, so old-style restores keep working."""
+    schema stays recoverable: every legacy lane matches, with the legacy DENSE
+    residual lane being exactly the dense expansion of the canonical sparse
+    lane (manifest ids + stacked rows)."""
     drv, *_ = _driver(TopKCodec(k_fraction=0.25))
     for _ in range(5):
         drv.step()
     legacy = drv.checkpoint_state()
     tree, manifest = drv.checkpoint()
     for key, val in legacy.items():
+        if key == "uplink_residuals":
+            continue  # layouts differ by design — compared below
         _assert_trees_equal(val, tree[key])
     assert set(tree) - set(legacy) == {"inflight_params", "uplink_rng"}
+    # sparse lane + manifest ids expand to exactly the legacy dense store
+    from repro.core.federated import SparseResidualStore
+
+    sparse = SparseResidualStore.from_stacked(
+        make_params(), manifest["uplink_ids"], tree["uplink_residuals"]
+    )
+    _assert_trees_equal(
+        sparse.to_dense(drv.pcfg.population), legacy["uplink_residuals"]
+    )
     assert len(manifest["slots"]) == 4
     assert manifest["cursor"] == drv.n_dispatched
 

@@ -224,6 +224,102 @@ def test_fused_server_flag_is_sharding_neutral_on_mesh():
     assert fused["mem"] == base["mem"]
 
 
+TILE_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import json
+import jax
+from repro.configs import get_config, INPUT_SHAPES
+from repro.launch.steps import build_train_step
+from repro.roofline import analyze_compiled
+
+try:
+    from jax.sharding import AxisType
+    mesh = jax.make_mesh((4, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+except ImportError:
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+cfg = get_config("qwen3-1.7b").reduced()
+with mesh:
+    step = build_train_step(cfg, INPUT_SHAPES["train_4k"], mesh, **{kw})
+    compiled = step.fn.lower(*step.args).compile()
+    rep = analyze_compiled(step.name, compiled, mesh.size, model_flops=step.model_flops)
+
+def client_dims(tree):
+    # every per-client argument dimension in the lowering (batch dim 1,
+    # weight/residual/tau leading dims)
+    dims = []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape") and len(leaf.shape) >= 1:
+            dims.append(list(leaf.shape))
+    return dims
+
+tokens = step.args[1]["tokens"]
+print("RESULT " + json.dumps({{
+    "mem": rep.peak_memory_per_device,
+    "flops": rep.flops_per_device,
+    "bottleneck": rep.bottleneck,
+    "clients": step.meta["clients"],
+    "cohort_tile": step.meta.get("cohort_tile"),
+    "client_axes": step.meta["client_axes"],
+    "tokens_shape": list(tokens.shape),
+    "tokens_spec": [str(s) for s in tokens.sharding.spec],
+    "arg_shapes": client_dims(step.args),
+}}))
+"""
+
+
+def _run_tile_dryrun(kw):
+    code = TILE_SNIPPET.format(
+        kw=json.dumps(kw).replace("true", "True")
+        .replace("false", "False").replace("null", "None"),
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=500,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise AssertionError(out.stdout)
+
+
+@pytest.mark.slow
+def test_cohort_tile_step_shardings_and_memory_flat_in_population():
+    """Streamed-cohort lowering (ISSUE 9): with ``cohort_tile`` the compiled
+    unit is ONE TILE — the population P and the cohort C are host-loop
+    quantities that never enter the lowering, so per-device memory is flat in
+    P by construction. Pinned here: (a) no argument of the tile lowering has
+    a client dimension wider than the tile (nothing P- or C-sized exists to
+    shard or spill); (b) the tile's client dim keeps the flat round's
+    client-axis sharding; (c) a tile the width of the flat round's cohort
+    costs no more device memory than the flat round itself (the tile emits
+    partial sums instead of the (C, N) delta buffer + server phase)."""
+    base_kw = {"mode": "federated", "elastic": True, "uplink": "topk",
+               "topk_fraction": 0.05}
+    flat = _run_tile_dryrun(base_kw)
+    tile_eq = _run_tile_dryrun({**base_kw, "cohort_tile": flat["clients"]})
+    tile_lg = _run_tile_dryrun({**base_kw, "cohort_tile": 2 * flat["clients"]})
+
+    # (a) nothing in the tile lowering is wider than the tile along any
+    # client-like leading dim: the widest non-parameter arg dim equals C_tile
+    for rep in (tile_eq, tile_lg):
+        ct = rep["cohort_tile"]
+        assert rep["clients"] == ct
+        assert rep["tokens_shape"][1] == ct
+    # (b) the tile's client dim rides the same client axes as the flat round
+    assert tile_eq["client_axes"] == flat["client_axes"]
+    assert tile_eq["tokens_spec"] == flat["tokens_spec"]
+    # (c) per-device memory: bounded by the TILE, not the population or the
+    # cohort — a tile the width of the flat cohort costs no more than the
+    # flat round, and doubling the tile (the only knob that can grow the
+    # client phase) is what moves memory
+    assert tile_eq["mem"] <= flat["mem"] * 1.02
+    assert tile_eq["mem"] < tile_lg["mem"]
+    assert tile_eq["bottleneck"] in ("compute", "memory", "collective")
+
+
 @pytest.mark.slow
 def test_federated_vs_centralized_collective_reduction():
     """Paper claim C7: per-token collective traffic of a federated round is far below
