@@ -26,6 +26,7 @@ from benchmarks import (
     bench_outer_optimizers,
     bench_partial_participation,
     bench_population_scale,
+    bench_robust_agg,
     bench_scaling_table,
 )
 
@@ -40,6 +41,7 @@ BENCHES = [
     ("async_vs_sync", bench_async_vs_sync),  # FedBuff buffer vs deadline masking
     ("population_scale", bench_population_scale),  # flat memory in P (ISSUE 9)
     ("adaptive_control", bench_adaptive_control),  # closed-loop knob tuning
+    ("robust_agg", bench_robust_agg),  # Byzantine resilience (ISSUE 10)
     ("outer_optimizers", bench_outer_optimizers),  # Fig 10, C5
     ("norm_dynamics", bench_norm_dynamics),  # Fig 7/8, C6
     ("eval_harness", bench_eval_harness),  # Tables 5/6 proxy

@@ -2,7 +2,7 @@
 client workers, each a separate ``repro.launch.train`` process speaking the
 length-prefixed socket protocol (docs/runtime.md).
 
-Three demos, each an end-to-end assertion the CI fast lane runs:
+Four demos, each an end-to-end assertion the CI fast lane runs:
 
   --demo round        1 server + 2 workers run a top-k-compressed async round
                       to completion, then the SAME configuration runs in-process
@@ -19,10 +19,18 @@ Three demos, each an end-to-end assertion the CI fast lane runs:
                       supervisor respawns killed workers (exit code 137) and the
                       run must still complete with a finite loss — leases,
                       retries and idempotent redispatch absorb the faults.
+  --demo corrupt      one worker poisons most of its delta payloads with
+                      NaN/Inf (``--chaos-corrupt`` — frames stay CRC-valid, so
+                      only the server's ``--screen`` door stands); the run must
+                      converge on the honest worker's pushes and the merged
+                      trace must show a ``screen_reject`` for the poison
+                      (``report --check --expect-faults`` audits coverage,
+                      docs/robustness.md).
 
   PYTHONPATH=src python examples/socket_federation.py --demo round
   PYTHONPATH=src python examples/socket_federation.py --demo kill-resume
   PYTHONPATH=src python examples/socket_federation.py --demo chaos
+  PYTHONPATH=src python examples/socket_federation.py --demo corrupt
 
 With ``--trace-dir DIR`` the chaos demo runs fully observed: every process
 writes ``--trace`` JSONL there, the server serves live ``/metrics`` (probed),
@@ -89,12 +97,12 @@ def _wait_for_port(logpath, proc, timeout=120.0):
     sys.exit("server never started listening")
 
 
-def _start_server(args, rounds, ckpt, logpath, resume=False, port=0):
+def _start_server(args, rounds, ckpt, logpath, resume=False, port=0, extra=None):
     cmd = _base_cmd(args) + [
         "--rounds", str(rounds), "--runtime", "sockets", "--role", "server",
         "--port", str(port), "--ckpt-dir", ckpt,
         "--lease-timeout", "15", "--io-timeout", "30",
-    ]
+    ] + (extra or [])
     if args.trace_dir:
         cmd += ["--trace", os.path.join(args.trace_dir, "server.jsonl"),
                 "--metrics-port", "0"]
@@ -120,6 +128,11 @@ def _worker_cmd(args, rounds, port, wid, chaos=None):
             "--chaos-kill", str(chaos.get("kill", 0)),
             "--chaos-seed", str(chaos.get("seed", 0)),
         ]
+        if chaos.get("corrupt"):
+            cmd += [
+                "--chaos-corrupt", str(chaos["corrupt"]),
+                "--chaos-corrupt-kinds", chaos.get("corrupt_kinds", "nan,inf"),
+            ]
     return cmd
 
 
@@ -293,10 +306,54 @@ def demo_chaos(args, tmp):
         _check_trace(args, expect_faults=True)
 
 
+def demo_corrupt(args, tmp):
+    """Payload-level Byzantine chaos against the defended server: one worker
+    corrupts most of its pushes (NaN/Inf deltas — the frames themselves stay
+    CRC-valid, so only the server's delta screen stands between the poison and
+    the model), the other stays honest. The screened door must reject every
+    poisoned push, the run must converge on the honest ones, and the merged
+    trace must carry ``screen_reject`` instants covering each ``corrupt_*``
+    fault (``report --check --expect-faults`` audits exactly that)."""
+    if not args.trace_dir:  # the audit IS the demo — always trace
+        args.trace_dir = os.path.join(tmp, "trace")
+        os.makedirs(args.trace_dir, exist_ok=True)
+    rounds, ckpt = 2, os.path.join(tmp, "sock_ck")
+    server, port = _start_server(
+        args, rounds, ckpt, os.path.join(tmp, "server.log"),
+        extra=["--screen", "--screen-warmup", "2", "--quarantine-rounds", "1"],
+    )
+    workers = []
+    for i in range(2):
+        cmd = _worker_cmd(
+            args, rounds, port, f"w{i}",
+            chaos={"corrupt": 0.9 if i == 0 else 0.0,
+                   "corrupt_kinds": "nan,inf", "seed": 11 + i},
+        )
+        workers.append((_spawn(cmd, os.path.join(tmp, f"worker{i}.log")), cmd))
+    _supervise_workers(workers, server, tmp, respawn=True)
+    assert server.returncode == 0, open(os.path.join(tmp, "server.log")).read()
+    assert _round_complete(ckpt, rounds - 1), "corrupted run never finished"
+    log = open(os.path.join(tmp, "server.log")).read()
+    losses = [float(m) for m in re.findall(r"loss=([\d.]+)", log)]
+    assert losses and all(np.isfinite(losses)), "non-finite loss under corruption"
+
+    merged = "".join(
+        open(os.path.join(args.trace_dir, f)).read()
+        for f in os.listdir(args.trace_dir) if f.endswith(".jsonl")
+    )
+    n_corrupt = merged.count('"corrupt_')
+    n_screen = merged.count('"screen_reject"')
+    assert n_corrupt > 0, "chaos never corrupted a payload (dice too kind?)"
+    assert n_screen > 0, "delta screen never fired on a poisoned push"
+    print(f"PASS: corrupt run converged (final loss {losses[-1]:.4f}, "
+          f"{n_corrupt} corruptions injected, {n_screen} screen rejections)")
+    _check_trace(args, expect_faults=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--demo", default="round",
-                    choices=["round", "kill-resume", "chaos"])
+                    choices=["round", "kill-resume", "chaos", "corrupt"])
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--trace-dir", default=None,
                     help="write per-process --trace JSONL here, probe the "
@@ -309,7 +366,7 @@ def main():
     tmp = tempfile.mkdtemp(prefix=f"socket_fed_{args.demo.replace('-', '_')}_")
     print(f"workdir: {tmp}")
     {"round": demo_round, "kill-resume": demo_kill_resume,
-     "chaos": demo_chaos}[args.demo](args, tmp)
+     "chaos": demo_chaos, "corrupt": demo_corrupt}[args.demo](args, tmp)
     if not args.keep_tmp:
         import shutil
 

@@ -45,6 +45,21 @@ from repro.core.federated import (  # noqa: F401
 )
 from repro.core.inner_opt import InnerOptConfig, cosine_lr, global_norm  # noqa: F401
 from repro.core.outer_opt import OuterOptConfig  # noqa: F401
+from repro.core.robust import (  # noqa: F401
+    CORRUPT_KINDS,
+    ROBUST_RULES,
+    RobustAggConfig,
+    RobustState,
+    corrupt_tree,
+    make_byzantine_fn,
+    make_robust_apply_fn,
+    masked_median,
+    median_clients,
+    normclip_scale,
+    sanitize_deltas,
+    screen_cohort,
+    trimmed_mean_clients,
+)
 from repro.core.sampler import (  # noqa: F401
     STRAGGLER_PROFILES,
     AsyncTimeline,

@@ -61,6 +61,8 @@ from repro.core.compression import Codec
 from repro.core.federated import (
     FederatedConfig,
     SparseResidualStore,
+    _finish_aggregate,
+    _weigh_clients,
     apply_aggregate_partial,
     combine_tile_metrics,
     federated_round,
@@ -72,6 +74,17 @@ from repro.core.federated import (
     trace_attrs,
 )
 from repro.core.inner_opt import global_norm
+from repro.core.robust import (
+    RobustAggConfig,
+    RobustState,
+    make_robust_apply_fn,
+    normclip_scale,
+    sanitize_deltas,
+    tile_fold_finish,
+    tile_fold_init,
+    tile_fold_size,
+    tile_fold_update,
+)
 from repro.obs.metrics import observe_staleness
 from repro.obs.tracer import get_tracer
 from repro.core.sampler import (
@@ -259,9 +272,34 @@ class SyncAggregator(Aggregator):
         donate: bool = True,
         tracer=None,
         controller=None,
+        robust: Optional[RobustAggConfig] = None,
     ):
         self.tracer = get_tracer(tracer)
         self.controller = controller
+        if robust is not None and robust.active and fused_server:
+            raise ValueError(
+                "--fused-server is a plain weighted-mean flat-buffer pass and "
+                "cannot host a robust rule or the delta screen — drop one of "
+                "--fused-server / --robust-agg / --screen"
+            )
+        if robust is not None and cohort_tile is not None:
+            if robust.screen:
+                raise ValueError(
+                    "the median/MAD delta screen needs the whole cohort's "
+                    "norms in one pass and cannot compose with --cohort-tile "
+                    "(tiles fold before the cohort median exists) — drop "
+                    "--screen or --cohort-tile"
+                )
+            if robust.rule == "normclip" and robust.clip_norm <= 0.0:
+                raise ValueError(
+                    "adaptive norm-clipping (clip_norm=0) needs the cohort "
+                    "median norm before any tile folds — use an absolute "
+                    "--clip-norm with --cohort-tile"
+                )
+        self.robust = robust
+        self.robust_state = (
+            RobustState(robust) if robust is not None and robust.stateful else None
+        )
         if partial_progress or pcfg.partial_progress:
             # the aggregator owns the policy: it teaches the participation
             # layer the round's τ so plan_round can derive per-client τ_i
@@ -299,6 +337,11 @@ class SyncAggregator(Aggregator):
             from repro.kernels.fedcore import fused_apply_aggregate
 
             apply_fn = fused_apply_aggregate
+        elif robust is not None and robust.active and cohort_tile is None:
+            # the robust server phase is a drop-in at the same apply_fn seam
+            # the fused phase uses; the tiled path composes differently (a
+            # per-tile order-statistic fold, built in _build_round_fn)
+            apply_fn = make_robust_apply_fn(fed, robust)
         self._loss_fn = loss_fn
         self._shard_clients = shard_clients
         self._apply_fn = apply_fn
@@ -337,11 +380,18 @@ class SyncAggregator(Aggregator):
         if self.cohort_tile is not None:
             fed_tile = replace(fed, clients_per_round=self.cohort_tile)
             donate_kw = {"donate_argnums": (3,)} if self.donate else {}
+            robust = self.robust
+            robust_tiled = robust is not None and robust.active
+            # the robust fold needs the tile's decoded per-client deltas (order
+            # statistics cannot be recovered from the weighted partial sum);
+            # the default path keeps the memory-minimal partial-sum-only output
+            return_deltas = robust_tiled
 
             def _tile(s, b, w, res, tau):
                 return run_client_tile(
                     loss_fn, fed_tile, s, b, w, shard_clients=shard_clients,
                     codec=codec, residuals=res, tau_steps=tau,
+                    return_deltas=return_deltas,
                 )
 
             self._tile_fn = jax.jit(_tile, **donate_kw)
@@ -352,9 +402,51 @@ class SyncAggregator(Aggregator):
                 lambda s, dsum, w, dn: apply_aggregate_partial(fed, s, dsum, w, dn),
                 **({"donate_argnums": (0,)} if self.donate else {}),
             )
+            self._fold_update_fn = self._fold_finish_fn = None
+            self._tile_clip_fn = None
+            if robust_tiled and robust.rule in ("trimmed", "median"):
+                rule, trim = robust.rule, robust.trim_fraction
+
+                def _fold_update(fold, deltas, norms, w):
+                    admit = (w > 0) & jnp.isfinite(norms)
+                    return tile_fold_update(
+                        fold, sanitize_deltas(deltas, jnp.isfinite(norms)), admit
+                    )
+
+                def _fold_finish(fold, s, dn, w):
+                    pg = tile_fold_finish(fold, rule, trim)
+                    return _finish_aggregate(fed, s, pg, dn, w)
+
+                self._fold_update_fn = jax.jit(
+                    _fold_update,
+                    **({"donate_argnums": (0,)} if self.donate else {}),
+                )
+                self._fold_finish_fn = jax.jit(
+                    _fold_finish,
+                    **({"donate_argnums": (1,)} if self.donate else {}),
+                )
+            elif robust_tiled and robust.rule == "normclip":
+                tau_clip = float(robust.clip_norm)  # absolute-only with tiles
+
+                def _clip_sum(deltas, norms, w):
+                    admit = (w > 0) & jnp.isfinite(norms)
+                    scale = normclip_scale(
+                        norms, admit, jnp.asarray(tau_clip, jnp.float32)
+                    )
+                    clean = sanitize_deltas(deltas, jnp.isfinite(norms))
+                    return jax.tree_util.tree_map(
+                        lambda x: jnp.sum(
+                            _weigh_clients(x, w.astype(jnp.float32) * scale),
+                            axis=0,
+                        ),
+                        clean,
+                    )
+
+                self._tile_clip_fn = jax.jit(_clip_sum)
             self._round_fn = None
             return
         self._tile_fn = self._apply_partial_fn = None
+        self._fold_update_fn = self._fold_finish_fn = self._tile_clip_fn = None
         donate = (0, 3) if stateful else (0,)
         donate_kw = {"donate_argnums": donate} if self.donate else {}
         if self.partial_progress and stateful:
@@ -452,15 +544,40 @@ class SyncAggregator(Aggregator):
         """One full round under this aggregator's policies; advances the
         owned state and returns the jitted round's metrics."""
         t = self.tracer
-        if t.enabled:
+        rs = self.robust_state
+        if t.enabled or rs is not None:
             rid = int(self.state["round"])
+        if t.enabled:
             t.begin("round", span_id=f"r{rid}", round=rid,
                     effective_k=float(plan.effective_k), track=0)
         w = jnp.asarray(self.round_weights(plan))
+        if rs is not None and rs.quarantine:
+            # quarantined population ids are zero-weighted for this round —
+            # the same masked-round mechanism dropout uses, so no recompiles.
+            # Skipped entirely when the table is empty (bitwise-neutral).
+            q = np.asarray(
+                [rs.is_quarantined(int(c), rid) for c in np.asarray(plan.selected)]
+            )
+            if q.any():
+                w = jnp.where(jnp.asarray(q), 0.0, w)
         if self.cohort_tile is not None:
             metrics = self._run_round_tiled(batches, plan, w)
         else:
             metrics = self._run_round_flat(batches, plan, w)
+        metrics = dict(metrics)
+        screen_mask = metrics.pop("screen_mask", None)
+        if screen_mask is not None and rs is not None:
+            flagged = np.nonzero(np.asarray(screen_mask) > 0)[0]
+            if len(flagged):
+                sel = np.asarray(plan.selected)
+                cids = [int(sel[i]) for i in flagged]
+                rs.note_screen_rejects(len(cids))
+                rs.add_quarantine(cids, rid)
+                if t.enabled:
+                    for cid in cids:
+                        t.point("screen_reject", parent=f"r{rid}",
+                                client=cid, round=rid)
+                        t.count("screen_rejects")
         if t.enabled:
             attrs = trace_attrs(metrics)  # the one device sync tracing pays
             t.end(f"r{rid}", **attrs)
@@ -517,6 +634,12 @@ class SyncAggregator(Aggregator):
         delta_sum = None
         delta_norms = []
         tile_outs = []
+        fold = None
+        if self._fold_update_fn is not None:
+            k = tile_fold_size(
+                self.robust.rule, self.robust.trim_fraction, n_tiles * ct
+            )
+            fold = tile_fold_init(self.state["params"], k)
         for t_idx in range(n_tiles):
             lo, hi = t_idx * ct, min((t_idx + 1) * ct, C)
             n_real = hi - lo
@@ -559,15 +682,34 @@ class SyncAggregator(Aggregator):
                     jax.tree_util.tree_map(lambda x: x[:n_real], rows),
                 )
             ds = out.pop("delta_sum")
-            delta_sum = ds if delta_sum is None else jax.tree_util.tree_map(
-                jnp.add, delta_sum, ds
-            )
-            delta_norms.append(out.pop("delta_norms"))
+            dn_t = out.pop("delta_norms")
+            if self._fold_update_fn is not None:
+                # robust tiled (trimmed/median): fold per-tile order-statistic
+                # moments instead of the weighted partial sum
+                fold = self._fold_update_fn(fold, out.pop("deltas"), dn_t, w_t)
+            elif self._tile_clip_fn is not None:
+                # robust tiled normclip: clip each client within its tile at
+                # the absolute τ, then the standard Σ wΔ accumulation
+                ds = self._tile_clip_fn(out.pop("deltas"), dn_t, w_t)
+                delta_sum = ds if delta_sum is None else jax.tree_util.tree_map(
+                    jnp.add, delta_sum, ds
+                )
+            else:
+                delta_sum = ds if delta_sum is None else jax.tree_util.tree_map(
+                    jnp.add, delta_sum, ds
+                )
+            delta_norms.append(dn_t)
             tile_outs.append(out)
-        new_state, agg_metrics = self._apply_partial_fn(
-            self.state, delta_sum, jnp.asarray(w_full),
-            jnp.concatenate(delta_norms),
-        )
+        if self._fold_update_fn is not None:
+            new_state, agg_metrics = self._fold_finish_fn(
+                fold, self.state, jnp.concatenate(delta_norms),
+                jnp.asarray(w_full),
+            )
+        else:
+            new_state, agg_metrics = self._apply_partial_fn(
+                self.state, delta_sum, jnp.asarray(w_full),
+                jnp.concatenate(delta_norms),
+            )
         self.state = new_state
         return dict(combine_tile_metrics(tile_outs), **agg_metrics)
 
@@ -589,7 +731,22 @@ class SyncAggregator(Aggregator):
             # exactly); absent entirely for static/None, keeping the default
             # checkpoint byte-identical to the uncontrolled schema
             manifest["control"] = self.controller.state_dict()
+        if self.robust_state is not None:
+            # defense state (quarantine table, guard window, counters) rides
+            # the manifest like the controller's — absent when the defense is
+            # off, keeping the undefended checkpoint byte-identical to PR-9's
+            manifest["robust"] = self.robust_state.state_dict()
         return tree, manifest
+
+    def adopt_model(self, tree: Dict[str, Any]) -> None:
+        """Adopt a rolled-back ``{params, outer}`` subset (divergence rollback):
+        the model and outer-optimizer lanes rewind to the blessed checkpoint
+        while ``round`` and ``rng`` keep advancing monotonically — a resumed
+        run replays the same rollback at the same round, bitwise, and the
+        round counter can never livelock."""
+        self.state = dict(
+            self.state, params=_own(tree["params"]), outer=_own(tree["outer"])
+        )
 
     def restore(self, state: Dict[str, Any], manifest: Optional[Dict[str, Any]] = None) -> None:
         """Adopt a restored checkpoint pytree (+ its aggregator manifest).
@@ -627,6 +784,14 @@ class SyncAggregator(Aggregator):
                     f"matches neither the manifest's uplink_ids (absent) nor "
                     f"the dense (population={self.pcfg.population}, ...) layout"
                 )
+        if (
+            self.robust_state is not None
+            and isinstance(manifest, dict)
+            and "robust" in manifest
+        ):
+            # a legacy (PR-9) manifest simply has no 'robust' key: the defense
+            # starts from a clean slate, and the restored lanes are untouched
+            self.robust_state.load_state_dict(manifest["robust"])
         self.state = _own(state) if self.donate else state
 
     @classmethod
@@ -699,6 +864,7 @@ class AsyncBufferAggregator(Aggregator):
         fused_server: bool = False,
         tracer=None,
         controller=None,
+        robust: Optional[RobustAggConfig] = None,
     ):
         self.fed = fed
         self.acfg = acfg
@@ -708,6 +874,20 @@ class AsyncBufferAggregator(Aggregator):
         self.fused_server = fused_server
         self.tracer = get_tracer(tracer)
         self.controller = controller
+        if robust is not None and robust.active and fused_server:
+            raise ValueError(
+                "--fused-server is a plain weighted-mean flat-buffer pass and "
+                "cannot host a robust rule or the delta screen — drop one of "
+                "--fused-server / --robust-agg / --screen"
+            )
+        self.robust = robust
+        self.robust_state = (
+            RobustState(robust) if robust is not None and robust.stateful else None
+        )
+        #: optional host hook corrupting a delta before admission — the
+        #: Byzantine-client simulator for benches (``make_byzantine_fn``);
+        #: None on every honest run
+        self.corrupt_fn = None
         if pcfg.partial_progress and pcfg.local_steps != fed.local_steps:
             raise ValueError(
                 "pcfg.local_steps must equal fed.local_steps under partial "
@@ -720,6 +900,13 @@ class AsyncBufferAggregator(Aggregator):
             from repro.kernels.fedcore import fused_apply_aggregate
 
             apply_fn = fused_apply_aggregate
+        elif robust is not None and robust.rule != "none":
+            # the robust rule guards each FLUSH over the buffer lanes; the
+            # screen is enforced earlier, at the admission door, so the flush
+            # phase runs with screening off (the buffer only holds admitted
+            # deltas — but may still hold pre-warmup poison, which sanitize
+            # and the NaN-aware metrics inside the robust phase absorb)
+            apply_fn = make_robust_apply_fn(fed, replace(robust, screen=False))
         self._apply_fn = apply_fn
         self._build_agg_fns()
         if state is None:
@@ -807,6 +994,10 @@ class AsyncBufferAggregator(Aggregator):
             self.tracer.begin("round", span_id=self._round_span,
                               round=int(self.state["round"]), track=0)
         if dispatch is not None:
+            if self.robust_state is not None and "robust" in dispatch:
+                # a legacy (PR-9) manifest has no 'robust' key: the defense
+                # starts from a clean slate over the restored lanes
+                self.robust_state.load_state_dict(dispatch["robust"])
             self._restore_dispatch(dispatch, inflight)
         else:
             for _ in range(pcfg.clients_per_round):
@@ -831,13 +1022,26 @@ class AsyncBufferAggregator(Aggregator):
         into (params, rest) at each call so only ``rest`` donates."""
         fed, acfg, codec = self.fed, self.acfg, self.codec
         apply_fn = self._apply_fn
-        self._admit_fn = jax.jit(
-            lambda p, rest, d, r, w: admit_delta(
-                fed, acfg, dict(rest, params=p), d, r, w, auto_flush=False,
-                codec=codec,
-            ),
-            donate_argnums=(1,),
-        )
+        self._screen = self.robust is not None and self.robust.screen
+        if self._screen:
+            # the screened door: non-finite rejection always, plus the
+            # adaptive norm bound (a traced scalar — the host recomputes it
+            # from the admitted-norm history, so no recompiles as it tightens)
+            self._admit_fn = jax.jit(
+                lambda p, rest, d, r, w, nb: admit_delta(
+                    fed, acfg, dict(rest, params=p), d, r, w, auto_flush=False,
+                    codec=codec, screen=True, norm_bound=nb,
+                ),
+                donate_argnums=(1,),
+            )
+        else:
+            self._admit_fn = jax.jit(
+                lambda p, rest, d, r, w: admit_delta(
+                    fed, acfg, dict(rest, params=p), d, r, w, auto_flush=False,
+                    codec=codec,
+                ),
+                donate_argnums=(1,),
+            )
         self._flush_fn = jax.jit(
             lambda p, rest: flush_buffer(
                 fed, acfg, dict(rest, params=p), apply_fn=apply_fn
@@ -1016,11 +1220,47 @@ class AsyncBufferAggregator(Aggregator):
         """Admit one (decoded-at-the-door) upload tagged with the model version
         it was computed against; rejected arrivals consume nothing."""
         params, rest = self._split_state()
-        self.state, m = self._admit_fn(
+        args = (
             params, rest, delta,
             jnp.asarray(version, jnp.int32), jnp.asarray(weight, jnp.float32),
         )
+        if self._screen:
+            bound = (
+                self.robust_state.norm_bound()
+                if self.robust_state is not None else float("inf")
+            )
+            args = args + (jnp.asarray(bound, jnp.float32),)
+        self.state, m = self._admit_fn(*args)
         return m
+
+    def _note_admission(self, ev, m) -> None:
+        """Host-side defense bookkeeping for one admission outcome. Every
+        finite norm seen at the door — admitted or screened — feeds the
+        adaptive bound: median/MAD is contamination-robust as long as
+        attackers stay a minority of recent traffic, and learning only from
+        accepted norms would freeze the bound the moment it started rejecting
+        honest drift. Screen rejections are traced as ``screen_reject``
+        instants; only *non-finite* payloads quarantine the sender — a single
+        norm-bound miss is weak temporal evidence, and quarantine release is
+        round-indexed, so quarantining the honest majority would halt round
+        progress and never expire."""
+        rs = self.robust_state
+        if rs is None or "delta_norm" not in m:
+            return
+        norm = float(m["delta_norm"])
+        finite = norm == norm and abs(norm) != float("inf")
+        if finite:
+            rs.observe_norm(norm)
+        if float(m["accepted"]) <= 0 and float(m.get("screened", 0.0)) > 0:
+            rs.note_screen_rejects()
+            if not finite:
+                rs.add_quarantine([int(ev.client)], int(self.state["round"]))
+            if self.tracer.enabled:
+                self.tracer.point(
+                    "screen_reject", parent=f"d{ev.index}", index=ev.index,
+                    client=int(ev.client), norm=norm if finite else -1.0,
+                )
+                self.tracer.count("screen_rejects")
 
     def flush(self) -> Dict[str, jax.Array]:
         """One outer update from the buffered deltas; bumps the version."""
@@ -1163,7 +1403,34 @@ class AsyncBufferAggregator(Aggregator):
             # exactly); absent entirely for static/None, keeping the default
             # checkpoint byte-identical to the uncontrolled schema
             manifest["control"] = self.controller.state_dict()
+        if self.robust_state is not None:
+            # defense state rides the manifest like the controller's — absent
+            # when the defense is off (undefended schema byte-identical)
+            manifest["robust"] = self.robust_state.state_dict()
         return tree, manifest
+
+    def adopt_model(self, tree: Dict[str, Any]) -> None:
+        """Adopt a rolled-back ``{params, outer}`` subset (divergence
+        rollback). Beyond the sync semantics (model/outer rewind; round, rng
+        and the dispatch machinery keep advancing), the async rollback also
+        DRAINS the buffer: buffered deltas were computed against — and
+        admitted into — the poisoned trajectory, and flushing them onto the
+        restored model would re-apply the damage. In-flight snapshots keep
+        their old params references; their uploads age normally against the
+        (monotone) version counter."""
+        m = self.acfg.buffer_size
+        params = _own(tree["params"])
+        self.state = dict(
+            self.state,
+            params=params,
+            outer=_own(tree["outer"]),
+            buffer=jax.tree_util.tree_map(
+                lambda p: jnp.zeros((m,) + p.shape, jnp.float32), params
+            ),
+            buf_weights=jnp.zeros((m,), jnp.float32),
+            buf_staleness=jnp.zeros((m,), jnp.float32),
+            buf_count=jnp.zeros((), jnp.int32),
+        )
 
     def _restore_dispatch(self, manifest: Dict[str, Any], inflight) -> None:
         self.validate_manifest(manifest, self.kind)
@@ -1275,11 +1542,12 @@ class AsyncFederationDriver(AsyncBufferAggregator):
         fused_server: bool = False,
         tracer=None,
         controller=None,
+        robust: Optional[RobustAggConfig] = None,
     ):
         super().__init__(
             fed, acfg, pcfg, seed=seed, params=params, rng=rng, state=state,
             codec=codec, dispatch=dispatch, fused_server=fused_server,
-            tracer=tracer, controller=controller,
+            tracer=tracer, controller=controller, robust=robust,
         )
         self.make_batches = make_batches
         fed1 = replace(fed, clients_per_round=1, keep_inner_state=False)
@@ -1309,6 +1577,18 @@ class AsyncFederationDriver(AsyncBufferAggregator):
         """
         ev, snapshot, version = self._pop_completion()
         row = None
+        rs = self.robust_state
+        if (
+            ev.completes
+            and rs is not None
+            and rs.is_quarantined(int(ev.client), int(self.state["round"]))
+        ):
+            # a quarantined client never runs its phase: its slot's simulated
+            # time is wasted work and the dispatch machinery moves on
+            self.work_wasted += ev.duration
+            self._trace_complete(ev, "quarantined")
+            self._dispatch()
+            return None
         if ev.completes:
             # the client trained and consumed its data either way — but when the
             # server is certain to reject the upload (staleness is known at pop
@@ -1345,8 +1625,13 @@ class AsyncFederationDriver(AsyncBufferAggregator):
                     )
                     self._res_norms.append(float(self._res_norm_fn(aux["residuals"])))
                 delta = jax.tree_util.tree_map(lambda d: d[0], deltas)
+                if self.corrupt_fn is not None:
+                    # Byzantine-client simulation: corrupt the honest delta at
+                    # the (virtual) push side, before the admission door
+                    delta = self.corrupt_fn(int(ev.client), int(ev.index), delta)
                 self.uplink_bytes_total += self._bytes_per_upload
                 m = self.admit(delta, version, self.event_weight(ev))
+                self._note_admission(ev, m)
                 rec = self._trace_admit(ev, m)
                 if float(m["accepted"]) > 0:
                     self.work_completed += ev.duration

@@ -63,6 +63,7 @@ from repro.core.federated import (
     apply_aggregate,
     init_federated_state,
 )
+from repro.core.inner_opt import global_norm
 
 
 @dataclass(frozen=True)
@@ -195,6 +196,8 @@ def admit_delta(
     auto_flush: bool = True,  # static: flush in-graph (lax.cond) when the buffer fills
     codec: Optional[Codec] = None,  # uplink codec; decodes the payload at admission
     apply_fn: Optional[Any] = None,  # server-phase override for the in-graph flush
+    screen: bool = False,  # static: delta screen at the door (core/robust.py)
+    norm_bound: Optional[jax.Array] = None,  # () traced admission norm bound
 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
     """Admit one client pseudo-gradient into the buffer; flush when it fills.
 
@@ -226,6 +229,15 @@ def admit_delta(
     ``federated_round`` *bitwise* (the sync-equivalence identity in the tests).
     Buffers write exact copies either way — the two modes differ only in how the
     flush is compiled, never in which deltas it aggregates.
+
+    ``screen`` (static) arms the payload defense at the door: a non-finite
+    decoded delta is always refused (its slot is never consumed, so it cannot
+    poison a flush), and with a finite ``norm_bound`` an over-norm delta is
+    refused too — the host derives the bound from the trailing admitted norms
+    (``core/robust.RobustState.norm_bound``) and passes it as a traced scalar,
+    so the bound tightening over time never recompiles the door. Screened
+    admissions report ``delta_norm`` and ``screened`` in the metrics; the
+    default path's metrics (and graph) are unchanged.
     """
     if codec is not None:
         delta = codec.decode(delta)
@@ -236,6 +248,19 @@ def admit_delta(
     accept = weight > 0
     if acfg.max_staleness > 0:
         accept = jnp.logical_and(accept, staleness <= float(acfg.max_staleness))
+    screen_metrics = {}
+    if screen:
+        dn = global_norm(delta)
+        ok = jnp.isfinite(dn)  # NaN/inf payloads never reach a buffer slot
+        if norm_bound is not None:
+            # NaN <= bound is False, inf <= inf is True — hence the isfinite
+            # conjunct above even when the bound is still +inf (warmup)
+            ok = jnp.logical_and(ok, dn <= norm_bound)
+        accept = jnp.logical_and(accept, ok)
+        screen_metrics = {
+            "delta_norm": dn,
+            "screened": jnp.logical_not(ok).astype(jnp.float32),
+        }
     # a full buffer rejects (never silently overwrites a slot): with auto_flush
     # this is unreachable (the flush below resets the counter), without it the
     # caller must flush before admitting more — visible as accepted == 0
@@ -264,6 +289,7 @@ def admit_delta(
         "accepted": accept.astype(jnp.float32),
         "staleness": staleness,
         "discounted_weight": jnp.where(accept, disc, 0.0),
+        **screen_metrics,
     }
     if auto_flush:
         zero_metrics = _zero_flush_metrics(fed, acfg, state, apply_fn=apply_fn)

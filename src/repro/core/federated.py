@@ -418,14 +418,22 @@ def aggregation_metrics(
     """
     c = delta_norms.shape[0]
     elastic = client_weights is not None
+    # NaN defense: a single non-finite client norm must not poison every
+    # reduction below. Non-finite lanes are masked out of participation and
+    # zeroed in the norm sums (0·NaN = NaN, so a zero *weight* alone is not
+    # enough — the norm itself is rewritten), and surface as a dedicated
+    # ``nonfinite_deltas`` count instead. All-finite cohorts take the same
+    # ops through all-True masks, so the healthy path stays bitwise.
+    finite = jnp.isfinite(delta_norms)
+    dn = jnp.where(finite, delta_norms, 0.0)
     if elastic:
-        w = client_weights.astype(jnp.float32)
+        w = jnp.where(finite, client_weights.astype(jnp.float32), 0.0)
         part = (w > 0).astype(jnp.float32)
         eff_k = jnp.maximum(jnp.sum(part), 1.0)
         metric_w = part / eff_k
         w_sum = jnp.sum(w)
         w_sq_sum = jnp.sum(jnp.square(w))
-        sum_sq = jnp.sum(jnp.square(w * delta_norms))
+        sum_sq = jnp.sum(jnp.square(w * dn))
         norm_of_sum_sq = jnp.square(pg_norm) * jnp.square(w_sum)
         off_diag = jnp.square(w_sum) - w_sq_sum
         pairwise_dot = jnp.where(
@@ -439,15 +447,17 @@ def aggregation_metrics(
             jnp.where(w_norm > 0, w_norm * jnp.log(jnp.maximum(w_norm, 1e-30)), 0.0)
         )
         effective_clients = jnp.sum(part)
-        delta_norm_mean = jnp.sum(delta_norms * metric_w)
+        delta_norm_mean = jnp.sum(dn * metric_w)
     else:
-        sum_sq = jnp.sum(jnp.square(delta_norms))
+        sum_sq = jnp.sum(jnp.square(dn))
         norm_of_sum_sq = jnp.square(pg_norm) * c * c
         pairwise_dot = (norm_of_sum_sq - sum_sq) / jnp.maximum(1, c * (c - 1))
         mean_sq_norm = sum_sq / c
         weight_entropy = jnp.log(jnp.asarray(c, jnp.float32))
-        effective_clients = jnp.asarray(c, jnp.float32)
-        delta_norm_mean = jnp.mean(delta_norms)
+        effective_clients = jnp.sum(finite.astype(jnp.float32))
+        delta_norm_mean = jnp.sum(dn) / jnp.maximum(
+            jnp.sum(finite.astype(jnp.float32)), 1.0
+        )
     consensus = pairwise_dot / (mean_sq_norm + 1e-12)  # ~cosine alignment
     return {
         "pseudo_grad_norm": pg_norm,
@@ -455,6 +465,7 @@ def aggregation_metrics(
         "client_consensus": consensus,
         "effective_clients": effective_clients,
         "weight_entropy": weight_entropy,
+        "nonfinite_deltas": jnp.sum((~finite).astype(jnp.float32)),
     }
 
 
@@ -506,20 +517,37 @@ def apply_aggregate(
     """
     if codec is not None:
         deltas = jax.vmap(codec.decode)(deltas)
-    elastic = client_weights is not None
-    if elastic:
-        w = client_weights.astype(jnp.float32)
-    global_params = state["params"]
 
     # THE once-per-round collective on the mesh (weighted when elastic)
-    if elastic:
-        pseudo_grad = _weighted_mean_clients(deltas, w)
+    if client_weights is not None:
+        pseudo_grad = _weighted_mean_clients(
+            deltas, client_weights.astype(jnp.float32)
+        )
     else:
         pseudo_grad = _mean_clients(deltas)
 
+    delta_norms = jax.vmap(global_norm)(deltas)
+    return _finish_aggregate(fed, state, pseudo_grad, delta_norms, client_weights)
+
+
+def _finish_aggregate(
+    fed: FederatedConfig,
+    state: Dict[str, Any],  # needs 'params', 'outer', 'round', 'rng'
+    pseudo_grad,  # pytree, NO client axis — the aggregated update direction
+    delta_norms: jax.Array,  # (C,) per-client decoded delta norms (metrics)
+    client_weights: Optional[jax.Array],  # (C,) or None (flat mean)
+) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    """Shared tail of every server phase: rng split → optional DP noise →
+    outer update → aggregation metrics → new state. Factored out of
+    :func:`apply_aggregate` so robust estimators (``core/robust.py``) can swap
+    the weighted mean for a trimmed mean / coordinate median and reuse the
+    identical noise/update/metrics sequence. Same ops in the same order as the
+    pre-refactor tail, so the plain-mean path through here is bitwise unchanged.
+    """
+    elastic = client_weights is not None
     # the leading axis is the cohort for the sync round but the *buffer* for the
     # async flush — size it from the data, not from fed.clients_per_round
-    C = jax.tree_util.tree_leaves(deltas)[0].shape[0]
+    C = delta_norms.shape[0]
 
     rng, noise_rng = jax.random.split(state["rng"])
     if fed.dp_noise > 0.0:
@@ -527,6 +555,7 @@ def apply_aggregate(
         # for the weighted mean that is max_k w_k/Σw (= 1/C when uniform), NOT
         # 1/K_eff — with skewed data-size weights one heavy client can dominate
         if elastic:
+            w = client_weights.astype(jnp.float32)
             scale = fed.dp_noise * jnp.max(w) / jnp.maximum(jnp.sum(w), 1e-12)
         else:
             scale = fed.dp_noise / C
@@ -539,11 +568,10 @@ def apply_aggregate(
         pseudo_grad = jax.tree_util.tree_unflatten(treedef, leaves)
 
     new_global, new_outer = outer_update(
-        fed.outer, global_params, pseudo_grad, state["outer"]
+        fed.outer, state["params"], pseudo_grad, state["outer"]
     )
 
     # ---- aggregation metrics (paper Figs 7, 8) — shared formula set ----
-    delta_norms = jax.vmap(global_norm)(deltas)
     metrics = dict(
         aggregation_metrics(delta_norms, global_norm(pseudo_grad), client_weights),
         global_model_norm=global_norm(new_global),
@@ -879,10 +907,16 @@ def run_client_tile(
     codec: Optional[Codec] = None,
     residuals: Optional[Any] = None,  # (C_tile, ...) cohort error-feedback rows
     tau_steps: Optional[jax.Array] = None,  # (C_tile,) int32
+    return_deltas: bool = False,  # also return the decoded (C_tile, ...) deltas
 ) -> Dict[str, Any]:
     """One cohort TILE of a streamed round: :func:`run_clients` on ``C_tile``
     clients, folded to weighted partial sums. Pure — jit it once and replay it
     over every tile of every round.
+
+    ``return_deltas`` adds the decoded per-client deltas to the output —
+    required by the robust tiled fold (``core/robust.py``), whose order
+    statistics cannot be recovered from the weighted partial sum alone. The
+    default path never materializes them past this function.
 
     Returns a dict of partial results:
 
@@ -926,6 +960,8 @@ def run_client_tile(
     if "residuals" in aux:
         out["residuals"] = aux["residuals"]
         out["uplink_residual_norm"] = aux["uplink_residual_norm"]
+    if return_deltas:
+        out["deltas"] = deltas
     return out
 
 

@@ -1,0 +1,614 @@
+"""Byzantine-resilient aggregation — screening, robust rules, rollback.
+
+The stack up to PR 9 trusts every admitted delta: a single NaN, overflowed, or
+adversarially scaled payload flows straight through the weighted mean into the
+global model. That is untenable for the cross-institution collaboration the
+paper envisions (and the FL-LLM security survey, arXiv 2406.09831, names
+Byzantine-robust aggregation as the standard defense). This module is the
+defense subsystem, plugged into the existing seams without touching the healthy
+path:
+
+  =======================  ====================================================
+  defense layer            where it plugs in
+  =======================  ====================================================
+  delta screen             the (C,) weight vector of the masked elastic round —
+                           :func:`screen_cohort` zero-weights non-finite and
+                           norm-outlier clients (median/MAD z-score) *inside*
+                           the jitted round, no recompiles; the async door gets
+                           the same test as an admission predicate
+                           (``admit_delta(screen=...)``)
+  robust aggregation rule  ``apply_aggregate``'s ``apply_fn`` seam —
+                           :func:`make_robust_apply_fn` swaps the weighted mean
+                           for a trimmed mean / coordinate median / norm-clipped
+                           mean and reuses ``_finish_aggregate`` (the identical
+                           DP-noise → outer-update → metrics tail)
+  tiled composition        per-tile order-statistic moments
+                           (:func:`tile_fold_init` / ``update`` / ``finish``) —
+                           top-k/bottom-k buffers + running sum fold across
+                           cohort tiles so trimming stays *exact* without ever
+                           materializing the (C, N) delta matrix
+  divergence rollback      :class:`RobustState` — a host-side, checkpointable
+                           monitor (update-norm spike guard, quarantine table,
+                           admitted-norm history) that rides
+                           ``manifest['robust']`` so kill/``--resume`` replays
+                           bitwise; the train loop performs the actual rollback
+                           through ``CheckpointManager``
+  =======================  ====================================================
+
+Everything jitted here is a pure function of ``(state, deltas, weights)``;
+everything stateful is host-side JSON in :class:`RobustState`. With
+``rule='none'`` and screening off no apply_fn is installed and no manifest key
+is written — the round is bitwise the undefended one (asserted in tests).
+
+The cardinal trap, documented once here and respected everywhere: **a zero
+weight does not neutralize a non-finite delta** (0·NaN = NaN). Flagged
+non-finite lanes must have their *values* rewritten (:func:`sanitize_deltas`)
+before any sum touches them; finite outliers only need the zero weight.
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.federated import (
+    FederatedConfig,
+    _finish_aggregate,
+    _weigh_clients,
+    _weighted_mean_clients,
+)
+from repro.core.inner_opt import global_norm
+
+#: the ``--robust-agg`` choices — 'none' means "mean, exactly as before"
+ROBUST_RULES = ("none", "trimmed", "median", "normclip")
+
+
+@dataclass(frozen=True)
+class RobustAggConfig:
+    """Knobs of the defense subsystem (the ``--robust-*`` flag family).
+
+    The defaults are all-off: ``rule='none'`` + ``screen=False`` installs no
+    apply_fn and the round stays bitwise the PR-9 round. ``clip_norm == 0``
+    selects the *adaptive* clip threshold (median admitted norm × ``clip_mult``,
+    recomputed every aggregation); a positive value is an absolute threshold —
+    and the only normclip mode that composes with cohort tiling, where the
+    in-pass median over all tiles is not available when early tiles fold.
+    """
+
+    rule: str = "none"  # none | trimmed | median | normclip
+    trim_fraction: float = 0.1  # trimmed: fraction trimmed from EACH tail
+    clip_mult: float = 3.0  # normclip adaptive: τ = median(norms) · clip_mult
+    clip_norm: float = 0.0  # normclip absolute τ (0 → adaptive)
+    screen: bool = False  # median/MAD norm screen + non-finite rejection
+    screen_z: float = 6.0  # robust z-score flag threshold
+    screen_warmup: int = 8  # async: admitted norms before the bound engages
+    rollback: bool = False  # divergence guard + checkpoint rollback
+    rollback_window: int = 8  # guard window (accepted pg-norm history)
+    rollback_factor: float = 4.0  # trigger: pg_norm > window median × factor
+    quarantine_rounds: int = 4  # rounds an offending client id sits out
+
+    def __post_init__(self):
+        if self.rule not in ROBUST_RULES:
+            raise ValueError(f"rule must be one of {ROBUST_RULES}, got {self.rule!r}")
+        if not 0.0 <= self.trim_fraction < 0.5:
+            raise ValueError(
+                f"trim_fraction must be in [0, 0.5), got {self.trim_fraction}"
+            )
+        if self.clip_mult <= 0.0:
+            raise ValueError(f"clip_mult must be > 0, got {self.clip_mult}")
+        if self.clip_norm < 0.0:
+            raise ValueError(f"clip_norm must be >= 0, got {self.clip_norm}")
+        if self.screen_z <= 0.0:
+            raise ValueError(f"screen_z must be > 0, got {self.screen_z}")
+        if self.screen_warmup < 1:
+            raise ValueError(f"screen_warmup must be >= 1, got {self.screen_warmup}")
+        if self.rollback_window < 2:
+            raise ValueError(
+                f"rollback_window must be >= 2, got {self.rollback_window}"
+            )
+        if self.rollback_factor <= 1.0:
+            raise ValueError(
+                f"rollback_factor must be > 1, got {self.rollback_factor}"
+            )
+        if self.quarantine_rounds < 1:
+            raise ValueError(
+                f"quarantine_rounds must be >= 1, got {self.quarantine_rounds}"
+            )
+
+    @property
+    def active(self) -> bool:
+        """True when the aggregation math itself changes (apply_fn installed)."""
+        return self.rule != "none" or self.screen
+
+    @property
+    def stateful(self) -> bool:
+        """True when host-side defense state must ride the manifest."""
+        return self.active or self.rollback
+
+
+# ---------------------------------------------------------------------------
+# Order statistics under a mask — the jittable building blocks
+# ---------------------------------------------------------------------------
+
+
+def masked_median(x: jax.Array, mask: jax.Array) -> jax.Array:
+    """Median of ``x[mask]`` at fixed shape: invalid lanes sort to +inf, the
+    two middle ranks of the n valid lanes are averaged (traced gather, so n may
+    vary round to round without recompiling). n == 0 → 0."""
+    filled = jnp.where(mask, x.astype(jnp.float32), jnp.inf)
+    s = jnp.sort(filled)
+    n = jnp.sum(mask.astype(jnp.int32))
+    lo = jnp.take(s, jnp.maximum((n - 1) // 2, 0))
+    hi = jnp.take(s, jnp.maximum(n // 2, 0))
+    return jnp.where(n > 0, 0.5 * (lo + hi), 0.0)
+
+
+def screen_cohort(
+    delta_norms: jax.Array,  # (C,) per-client delta norms (may contain NaN/inf)
+    weights: jax.Array,  # (C,) aggregation weights (0 = already masked out)
+    z: float,  # robust z-score threshold
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The delta screen: non-finite rejection + median/MAD norm-outlier test.
+
+    Returns ``(new_weights, flagged, finite)`` — flagged lanes are zero-weighted
+    in ``new_weights``; healthy lanes keep their weight *bitwise*
+    (``where(False, 0, w)`` returns ``w`` unchanged), which is what lets the
+    screen live inside the already-compiled masked round.
+
+    The outlier test uses the robust z-score |x − med| / (1.4826·MAD) over the
+    valid lanes only, and disarms itself below 3 valid clients (median/MAD of a
+    pair flags nothing meaningful). Non-finite norms are always flagged —
+    callers must also :func:`sanitize_deltas` those lanes (0·NaN = NaN).
+    """
+    finite = jnp.isfinite(delta_norms)
+    valid = finite & (weights > 0)
+    med = masked_median(delta_norms, valid)
+    dev = jnp.where(valid, jnp.abs(delta_norms - med), 0.0)
+    mad = masked_median(dev, valid)
+    sigma = jnp.maximum(1.4826 * mad, 1e-12)
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    outlier = valid & (dev / sigma > z) & (n_valid >= 3)
+    flagged = (~finite) | outlier
+    new_w = jnp.where(flagged, 0.0, weights)
+    return new_w, flagged, finite
+
+
+def sanitize_deltas(deltas, finite: jax.Array):
+    """Zero every element of each non-finite client lane. A zero weight does
+    NOT remove a poisoned lane from any sum (0·NaN = NaN) — the lane's values
+    must be rewritten. All-finite cohorts pass through bitwise (``where`` with
+    an all-True mask returns the original array)."""
+
+    def fix(x):
+        m = finite.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x, jnp.zeros_like(x))
+
+    return jax.tree_util.tree_map(fix, deltas)
+
+
+# ---------------------------------------------------------------------------
+# Robust aggregation rules — flat (C, ...) cohort
+# ---------------------------------------------------------------------------
+#
+# Trimmed mean and coordinate median are the standard Byzantine-robust
+# estimators (Yin et al. 2018): they operate UNWEIGHTED over the admitted
+# lanes — the weight vector acts purely as the admission mask (w > 0), because
+# an attacker who can inflate its own aggregation weight defeats any weighted
+# order statistic. Norm-clipping keeps the weighted mean but bounds each
+# client's influence.
+
+
+def _trim_count(trim_fraction: float, n: jax.Array) -> jax.Array:
+    """k_eff = min(floor(trim·n), (n−1)//2) — never trims past the median."""
+    k = (trim_fraction * n.astype(jnp.float32)).astype(jnp.int32)
+    return jnp.clip(k, 0, jnp.maximum((n - 1) // 2, 0))
+
+
+def trimmed_mean_clients(deltas, admit: jax.Array, trim_fraction: float):
+    """Coordinate-wise trimmed mean over admitted lanes: per coordinate, drop
+    the k_eff smallest and k_eff largest admitted values, average the rest.
+    Admitted lanes must be finite (non-finite norms fail ``admit`` upstream),
+    so the ±inf sort sentinels for masked lanes are unambiguous."""
+    c = admit.shape[0]
+    n = jnp.sum(admit.astype(jnp.int32))
+    k_eff = _trim_count(trim_fraction, n)
+
+    def tm(x):
+        m = admit.reshape((-1,) + (1,) * (x.ndim - 1))
+        s = jnp.sort(jnp.where(m, x, jnp.inf), axis=0)  # masked lanes sort last
+        rank = jnp.arange(c).reshape((-1,) + (1,) * (x.ndim - 1))
+        sel = (rank >= k_eff) & (rank < n - k_eff)
+        kept = jnp.sum(jnp.where(sel, s, 0.0), axis=0)
+        return kept / jnp.maximum(n - 2 * k_eff, 1).astype(x.dtype)
+
+    return jax.tree_util.tree_map(tm, deltas)
+
+
+def median_clients(deltas, admit: jax.Array):
+    """Coordinate-wise median over admitted lanes (even n averages the two
+    middle ranks, matching :func:`masked_median`). Zero everywhere if no lane
+    is admitted."""
+    n = jnp.sum(admit.astype(jnp.int32))
+    lo_rank = jnp.maximum((n - 1) // 2, 0)
+    hi_rank = jnp.maximum(n // 2, 0)
+
+    def med(x):
+        m = admit.reshape((-1,) + (1,) * (x.ndim - 1))
+        s = jnp.sort(jnp.where(m, x, jnp.inf), axis=0)
+        lo = jnp.take(s, lo_rank, axis=0)
+        hi = jnp.take(s, hi_rank, axis=0)
+        return jnp.where(n > 0, 0.5 * (lo + hi), 0.0).astype(x.dtype)
+
+    return jax.tree_util.tree_map(med, deltas)
+
+
+def normclip_scale(
+    delta_norms: jax.Array,  # (C,) — may contain NaN/inf (those lanes scale 0)
+    admit: jax.Array,  # (C,) bool
+    tau: jax.Array,  # () clip threshold
+) -> jax.Array:
+    """Per-client norm-clip factor s_k = min(1, τ/‖Δ_k‖); non-admitted lanes
+    get exactly 0 (their values are already sanitized upstream)."""
+    safe = jnp.maximum(jnp.where(jnp.isfinite(delta_norms), delta_norms, 1.0), 1e-12)
+    return jnp.where(admit, jnp.minimum(1.0, tau / safe), 0.0)
+
+
+def make_robust_apply_fn(fed: FederatedConfig, cfg: RobustAggConfig):
+    """Build a drop-in server phase with ``apply_aggregate``'s exact signature
+    and state/metrics contract — installs at the same ``apply_fn`` seam as the
+    fused Pallas phase (the two are mutually exclusive; the aggregator rejects
+    the combination).
+
+    Pipeline: decode → screen (optional) → sanitize non-finite lanes → robust
+    estimator (or the plain weighted mean for ``rule='none'`` + screen) →
+    ``_finish_aggregate`` (the shared DP-noise/outer-update/metrics tail).
+    With screening on, the returned metrics carry a ``screen_mask`` (C,) lane
+    so the host can trace/quarantine flagged clients — ``SyncAggregator`` pops
+    it before the scalar metrics row is assembled.
+    """
+    if not cfg.active:
+        raise ValueError("make_robust_apply_fn called with an inactive config")
+
+    def robust_apply(fed_, state, deltas, client_weights=None, codec=None):
+        if codec is not None:
+            deltas = jax.vmap(codec.decode)(deltas)
+        c = jax.tree_util.tree_leaves(deltas)[0].shape[0]
+        w = (
+            client_weights.astype(jnp.float32)
+            if client_weights is not None
+            else jnp.ones((c,), jnp.float32)
+        )
+        raw_norms = jax.vmap(global_norm)(deltas)
+        finite = jnp.isfinite(raw_norms)
+        extra = {}
+        if cfg.screen:
+            w, flagged, finite = screen_cohort(raw_norms, w, cfg.screen_z)
+            extra["screen_mask"] = flagged.astype(jnp.float32)
+            extra["screened_clients"] = jnp.sum(flagged.astype(jnp.float32))
+        deltas = sanitize_deltas(deltas, finite)
+        admit = (w > 0) & finite
+
+        if cfg.rule == "trimmed":
+            pseudo_grad = trimmed_mean_clients(deltas, admit, cfg.trim_fraction)
+        elif cfg.rule == "median":
+            pseudo_grad = median_clients(deltas, admit)
+        elif cfg.rule == "normclip":
+            if cfg.clip_norm > 0.0:
+                tau = jnp.asarray(cfg.clip_norm, jnp.float32)
+            else:
+                tau = masked_median(raw_norms, admit) * cfg.clip_mult
+            scale = normclip_scale(raw_norms, admit, tau)
+            pseudo_grad = _weighted_mean_clients(
+                jax.tree_util.tree_map(lambda x: _weigh_clients(x, scale), deltas), w
+            )
+        else:  # 'none' — screen-only: plain weighted mean over screened weights
+            pseudo_grad = _weighted_mean_clients(deltas, w)
+
+        # raw (unsanitized) norms feed the metrics: aggregation_metrics is
+        # NaN-aware and reports poisoned lanes as nonfinite_deltas
+        new_state, metrics = _finish_aggregate(fed, state, pseudo_grad, raw_norms, w)
+        return new_state, dict(metrics, **extra)
+
+    return robust_apply
+
+
+# ---------------------------------------------------------------------------
+# Tiled composition — exact trimming/median across streamed cohort tiles
+# ---------------------------------------------------------------------------
+#
+# The streamed round (PR 9) folds each tile to a weighted partial sum and never
+# holds the (C, N) delta matrix. Order statistics need more than a sum, but not
+# the full matrix: a coordinate's trimmed mean is recoverable from (running
+# total, top-k buffer, bottom-k buffer, admitted count) as long as k bounds the
+# trim count — total − Σ(top k_eff) − Σ(bottom k_eff), averaged over n − 2k_eff.
+# The median is rank (n−1)//2, n//2 of the bottom buffer with k = C//2 + 1.
+# Memory is O(k·N) instead of O(C·N); for the median that is ~half the flat
+# buffer (documented trade: tiled median halves, not removes, the C-term).
+
+
+def tile_fold_size(rule: str, trim_fraction: float, c_total: int) -> int:
+    """Static per-coordinate buffer depth k for the cross-tile fold."""
+    if rule == "trimmed":
+        return max(1, int(trim_fraction * c_total))
+    if rule == "median":
+        return c_total // 2 + 1
+    raise ValueError(f"no tiled fold for rule {rule!r}")
+
+
+def tile_fold_init(params_like, k: int) -> Dict[str, Any]:
+    """Empty fold: ∓inf sentinel buffers, zero totals, zero count."""
+    return {
+        "top": jax.tree_util.tree_map(
+            lambda p: jnp.full((k,) + p.shape, -jnp.inf, jnp.float32), params_like
+        ),
+        "bot": jax.tree_util.tree_map(
+            lambda p: jnp.full((k,) + p.shape, jnp.inf, jnp.float32), params_like
+        ),
+        "total": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params_like
+        ),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def tile_fold_update(fold: Dict[str, Any], deltas, admit: jax.Array):
+    """Fold one tile's decoded deltas in: masked lanes enter as ∓inf (so they
+    can never displace a real value), buffers re-sort and truncate to k, totals
+    and the admitted count accumulate. Pure — jit once, replay per tile."""
+    k = jax.tree_util.tree_leaves(fold["top"])[0].shape[0]
+
+    def upd_top(top, d):
+        m = admit.reshape((-1,) + (1,) * (d.ndim - 1))
+        cat = jnp.concatenate([top, jnp.where(m, d, -jnp.inf)], axis=0)
+        return jnp.sort(cat, axis=0)[-k:]
+
+    def upd_bot(bot, d):
+        m = admit.reshape((-1,) + (1,) * (d.ndim - 1))
+        cat = jnp.concatenate([bot, jnp.where(m, d, jnp.inf)], axis=0)
+        return jnp.sort(cat, axis=0)[:k]
+
+    def upd_total(t, d):
+        m = admit.reshape((-1,) + (1,) * (d.ndim - 1))
+        return t + jnp.sum(jnp.where(m, d, 0.0), axis=0)
+
+    return {
+        "top": jax.tree_util.tree_map(upd_top, fold["top"], deltas),
+        "bot": jax.tree_util.tree_map(upd_bot, fold["bot"], deltas),
+        "total": jax.tree_util.tree_map(upd_total, fold["total"], deltas),
+        "count": fold["count"] + jnp.sum(admit.astype(jnp.int32)),
+    }
+
+
+def tile_fold_finish(fold: Dict[str, Any], rule: str, trim_fraction: float):
+    """Recover the robust pseudo-gradient from the folded moments.
+
+    Trimmed: total − Σ(largest k_eff) − Σ(smallest k_eff), over n − 2k_eff.
+    k_eff ≤ min(k, (n−1)//2) by construction, so the selected buffer entries
+    are always real values, never ∓inf sentinels (n admitted values fill the
+    buffer ends nearest the data). Median: ranks (n−1)//2 and n//2 of the
+    ascending bottom buffer — in range because n ≤ C and k = C//2 + 1.
+
+    Matches the flat estimators to float tolerance, NOT bitwise: the running
+    total sums in tile order, the flat path in lane order.
+    """
+    n = fold["count"]
+    k = jax.tree_util.tree_leaves(fold["top"])[0].shape[0]
+
+    if rule == "trimmed":
+        k_eff = jnp.minimum(_trim_count(trim_fraction, n), k)
+
+        def fin(top, bot, total):
+            rank = jnp.arange(k).reshape((-1,) + (1,) * total.ndim)
+            top_sum = jnp.sum(jnp.where(rank >= k - k_eff, top, 0.0), axis=0)
+            bot_sum = jnp.sum(jnp.where(rank < k_eff, bot, 0.0), axis=0)
+            kept = total - top_sum - bot_sum
+            return kept / jnp.maximum(n - 2 * k_eff, 1).astype(total.dtype)
+
+        return jax.tree_util.tree_map(fin, fold["top"], fold["bot"], fold["total"])
+
+    if rule == "median":
+        lo_rank = jnp.maximum((n - 1) // 2, 0)
+        hi_rank = jnp.maximum(n // 2, 0)
+
+        def fin(bot):
+            lo = jnp.take(bot, lo_rank, axis=0)
+            hi = jnp.take(bot, hi_rank, axis=0)
+            return jnp.where(n > 0, 0.5 * (lo + hi), 0.0)
+
+        return jax.tree_util.tree_map(fin, fold["bot"])
+
+    raise ValueError(f"no tiled fold for rule {rule!r}")
+
+
+# ---------------------------------------------------------------------------
+# Byzantine client simulator — deterministic payload corruption for benches
+# ---------------------------------------------------------------------------
+
+#: payload corruption kinds shared by the chaos monkey and the bench simulator
+CORRUPT_KINDS = ("nan", "inf", "scale", "sign_flip", "replay")
+
+
+def corrupt_tree(tree, kind: str, scale: float = 64.0):
+    """Apply one payload corruption to a delta/payload pytree (float leaves
+    only — integer codec index planes are left alone so the payload still
+    decodes). 'replay' is a transport-level kind (resend an old payload) and
+    has no single-tree form — callers handle it."""
+    def is_float(x):
+        return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+    if kind == "nan":
+        fn = lambda x: jnp.full_like(x, jnp.nan) if is_float(x) else x
+    elif kind == "inf":
+        fn = lambda x: jnp.full_like(x, jnp.inf) if is_float(x) else x
+    elif kind == "scale":
+        fn = lambda x: x * jnp.asarray(scale, x.dtype) if is_float(x) else x
+    elif kind == "sign_flip":
+        fn = lambda x: -x if is_float(x) else x
+    else:
+        raise ValueError(f"corrupt_tree cannot apply kind {kind!r}")
+    return jax.tree_util.tree_map(fn, tree)
+
+
+def make_byzantine_fn(fraction: float, kind: str, population: int):
+    """Deterministic Byzantine cohort for the bench/simulator path: population
+    client ids below ``floor(fraction · P)`` are attackers and corrupt every
+    delta they push; everyone else is honest. Returns None for fraction 0.
+
+    The returned callable has the ``AsyncFederationDriver.corrupt_fn``
+    signature ``(client_id, dispatch_index, delta) -> delta``.
+    """
+    if fraction <= 0.0:
+        return None
+    if kind not in CORRUPT_KINDS or kind == "replay":
+        raise ValueError(f"byzantine kind must be one of {CORRUPT_KINDS[:-1]}, got {kind!r}")
+    bad = int(fraction * population)
+
+    def corrupt(client_id: int, index: int, delta):
+        if int(client_id) >= bad:
+            return delta
+        return corrupt_tree(delta, kind)
+
+    return corrupt
+
+
+# ---------------------------------------------------------------------------
+# Host-side defense state — quarantine, norm history, divergence guard
+# ---------------------------------------------------------------------------
+
+
+class RobustState:
+    """The checkpointable host half of the defense: everything the jitted math
+    cannot own because it spans rounds and client identities.
+
+    - ``quarantine``: population client id → release round. Quarantined ids are
+      zero-weighted (sync) or skipped before their client phase runs (async).
+    - ``norm_history``: trailing admitted delta norms — the async door's
+      adaptive screen bound (median + z·1.4826·MAD) once ``screen_warmup``
+      samples exist.
+    - ``guard_window``: trailing accepted pseudo-gradient norms; the divergence
+      guard trips when a new pg-norm is non-finite or exceeds the full window's
+      median × ``rollback_factor``. Triggering values are NOT appended, so one
+      spike cannot drag the baseline up.
+    - ``last_good``: newest round whose checkpoint the guard has blessed — the
+      rollback target.
+
+    Serializes to plain JSON via :meth:`state_dict` and rides
+    ``manifest['robust']``; restoring replays bitwise because every decision
+    above is a pure function of this state.
+    """
+
+    def __init__(self, cfg: RobustAggConfig):
+        self.cfg = cfg
+        self.quarantine: Dict[int, int] = {}
+        self.norm_history: deque = deque(maxlen=max(4 * cfg.screen_warmup, 32))
+        self.guard_window: deque = deque(maxlen=cfg.rollback_window)
+        self.last_good: int = -1
+        self.counters: Dict[str, int] = {
+            "screen_rejects": 0,
+            "quarantines": 0,
+            "rollbacks": 0,
+        }
+
+    # -- quarantine -------------------------------------------------------
+    def is_quarantined(self, client_id: int, rnd: int) -> bool:
+        """True while ``rnd`` is before the client's release round (expired
+        entries are dropped on query, keeping the table small)."""
+        release = self.quarantine.get(int(client_id))
+        if release is None:
+            return False
+        if rnd >= release:
+            del self.quarantine[int(client_id)]
+            return False
+        return True
+
+    def add_quarantine(self, client_ids: Iterable[int], rnd: int) -> None:
+        for cid in client_ids:
+            self.quarantine[int(cid)] = max(
+                self.quarantine.get(int(cid), 0), rnd + self.cfg.quarantine_rounds
+            )
+            self.counters["quarantines"] += 1
+
+    # -- async admission norm screen --------------------------------------
+    def observe_norm(self, norm: float) -> None:
+        v = float(norm)
+        if v == v and abs(v) != float("inf"):  # finite only — NaN != NaN
+            self.norm_history.append(v)
+
+    def norm_bound(self) -> float:
+        """Adaptive admission bound: median + z·1.4826·MAD of the trailing
+        admitted norms; +inf until ``screen_warmup`` samples exist (cold
+        starts must not reject the first honest arrivals). The bound is
+        floored at 2× the median: with near-identical warmup norms the MAD
+        collapses to ~0 and a pure z-score bound would reject every honest
+        delta whose norm drifts as the server model moves — and because only
+        admitted norms refresh the history, the door could never recover.
+        Doubling headroom keeps honest drift admissible while still rejecting
+        large-scale amplification attacks."""
+        if len(self.norm_history) < self.cfg.screen_warmup:
+            return float("inf")
+        vals = sorted(self.norm_history)
+        med = _median_sorted(vals)
+        mad = _median_sorted(sorted(abs(v - med) for v in vals))
+        return max(med + self.cfg.screen_z * 1.4826 * mad, 2.0 * med, 1e-9)
+
+    # -- divergence guard -------------------------------------------------
+    def observe_update(self, pg_norm: float) -> bool:
+        """Feed one accepted aggregation's pseudo-gradient norm; returns True
+        when the guard trips (caller rolls back to ``last_good``)."""
+        v = float(pg_norm)
+        if v != v or abs(v) == float("inf"):
+            return True
+        if (
+            len(self.guard_window) == self.cfg.rollback_window
+            and v > _median_sorted(sorted(self.guard_window)) * self.cfg.rollback_factor
+        ):
+            return True
+        self.guard_window.append(v)
+        return False
+
+    def mark_good(self, rnd: int) -> None:
+        self.last_good = max(self.last_good, int(rnd))
+
+    def note_rollback(self) -> None:
+        self.counters["rollbacks"] += 1
+
+    def note_screen_rejects(self, n: int = 1) -> None:
+        self.counters["screen_rejects"] += int(n)
+
+    # -- checkpoint round-trip -------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "quarantine": {str(k): int(v) for k, v in self.quarantine.items()},
+            "norm_history": [float(v) for v in self.norm_history],
+            "guard_window": [float(v) for v in self.guard_window],
+            "last_good": int(self.last_good),
+            "counters": dict(self.counters),
+        }
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        self.quarantine = {int(k): int(v) for k, v in d.get("quarantine", {}).items()}
+        self.norm_history = deque(
+            d.get("norm_history", []), maxlen=self.norm_history.maxlen
+        )
+        self.guard_window = deque(
+            d.get("guard_window", []), maxlen=self.guard_window.maxlen
+        )
+        self.last_good = int(d.get("last_good", -1))
+        self.counters.update({k: int(v) for k, v in d.get("counters", {}).items()})
+
+    def snapshot_json(self) -> str:
+        """Canonical JSON form (stable key order) — handy for bitwise-resume
+        assertions in tests."""
+        return json.dumps(self.state_dict(), sort_keys=True)
+
+
+def _median_sorted(vals) -> float:
+    vals = list(vals)
+    n = len(vals)
+    if n == 0:
+        return 0.0
+    return 0.5 * (vals[(n - 1) // 2] + vals[n // 2])

@@ -76,9 +76,29 @@ on powers of two, K in steps of 2), are emitted as ``knob_update`` obs events
 with their triggering evidence, and the controller state rides the checkpoint
 manifest so a governed run kills and ``--resume``\\ s bitwise.
 
+Byzantine-resilient aggregation (docs/robustness.md): ``--robust-agg
+{none,trimmed,median,normclip}`` swaps the server's plain weighted mean for a
+robust rule (coordinate-wise trimmed mean / median, or per-delta norm
+clipping); ``--screen`` adds a delta screen at the admission boundary —
+non-finite deltas are rejected unconditionally, norm outliers past
+``--screen-z`` robust z-scores are zero-weighted (sync cohort) or rejected at
+the buffer door (async, with a ``--screen-warmup`` adaptive bound) and
+quarantined for ``--quarantine-rounds``; ``--rollback`` (requires
+``--ckpt-dir``) arms the divergence guard — an update norm spiking past
+``--rollback-factor`` × the trailing ``--rollback-window`` median restores
+the server from the last good checkpoint. All three compose freely and ride
+the checkpoint manifest, so a defended run kills and ``--resume``\\ s bitwise;
+with everything off the round is bitwise the undefended one. Attacks come
+from ``--chaos-corrupt`` (socket runtime: worker payloads poisoned on the
+wire side) or ``--byzantine-fraction``/``--byzantine-kind`` (async inproc:
+deterministic attacker clients — the bench harness). ``--robust-agg`` is
+incompatible with ``--fused-server``; under ``--cohort-tile`` the trimmed and
+median rules stream per-tile fold buffers, normclip needs an absolute
+``--clip-norm``, and ``--screen`` (whole-cohort norms) is unavailable.
+
 The full flag matrix — how ``--aggregation`` × ``--uplink`` × ``--runtime`` ×
-``--control`` compose, and which doc covers which layer — is mapped in
-docs/architecture.md.
+``--control`` × ``--robust-agg`` compose, and which doc covers which layer —
+is mapped in docs/architecture.md.
 
 Usage (CPU, minutes):
   PYTHONPATH=src python -m repro.launch.train --arch photon-75m --reduced \
@@ -93,6 +113,9 @@ Usage (CPU, minutes):
   PYTHONPATH=src python -m repro.launch.train --reduced --rounds 6 \
       --aggregation async --straggler-profile heavy --control staleness \
       --control-target 4 --trace /tmp/run.jsonl
+  PYTHONPATH=src python -m repro.launch.train --reduced --rounds 6 \
+      --aggregation async --byzantine-fraction 0.2 --byzantine-kind nan \
+      --robust-agg trimmed --screen --rollback --ckpt-dir /tmp/ck
 """
 from __future__ import annotations
 
@@ -115,6 +138,8 @@ from repro.control import (
     StalenessGovernor,
 )
 from repro.core import (
+    CORRUPT_KINDS,
+    ROBUST_RULES,
     STRAGGLER_PROFILES,
     UPLINK_SCHEMES,
     AsyncAggConfig,
@@ -124,8 +149,10 @@ from repro.core import (
     InnerOptConfig,
     OuterOptConfig,
     ParticipationConfig,
+    RobustAggConfig,
     SyncAggregator,
     get_codec,
+    make_byzantine_fn,
     plan_round,
 )
 from repro.data import build_client_streams, round_batches, validation_stream
@@ -147,9 +174,35 @@ from repro.runtime import ChaosConfig, ClientWorker, FederationDriver, SocketBac
 def _chaos_from_args(args):
     chaos = ChaosConfig(
         drop=args.chaos_drop, delay=args.chaos_delay, kill=args.chaos_kill,
+        corrupt=args.chaos_corrupt,
+        corrupt_kinds=tuple(
+            k.strip() for k in args.chaos_corrupt_kinds.split(",") if k.strip()
+        ),
         seed=args.chaos_seed,
     )
     return chaos if chaos.active else None
+
+
+def _robust_from_args(args):
+    """``--robust-agg``/``--screen``/``--rollback`` → a
+    :class:`RobustAggConfig`, or None when every defense is off (the
+    aggregators then install no robust apply_fn at all — trivially bitwise
+    the undefended round)."""
+    if args.robust_agg == "none" and not args.screen and not args.rollback:
+        return None
+    return RobustAggConfig(
+        rule=args.robust_agg,
+        trim_fraction=args.trim_fraction,
+        clip_mult=args.clip_mult,
+        clip_norm=args.clip_norm,
+        screen=args.screen,
+        screen_z=args.screen_z,
+        screen_warmup=args.screen_warmup,
+        rollback=args.rollback,
+        rollback_window=args.rollback_window,
+        rollback_factor=args.rollback_factor,
+        quarantine_rounds=args.quarantine_rounds,
+    )
 
 
 def _build_tracer(args, proc):
@@ -371,7 +424,69 @@ def parse_args(argv=None):
                     help="fault injection: P(outbound message delayed)")
     ap.add_argument("--chaos-kill", type=float, default=0.0,
                     help="fault injection: P(process hard-exits before a send)")
+    ap.add_argument("--chaos-corrupt", type=float, default=0.0,
+                    help="fault injection: P(a worker's push payload is "
+                         "poisoned before send — NaN/Inf fill, ×64 scale, "
+                         "sign flip or replay of the previous push; "
+                         "docs/robustness.md)")
+    ap.add_argument("--chaos-corrupt-kinds", default=",".join(CORRUPT_KINDS),
+                    help="comma-separated corruption kinds the --chaos-corrupt "
+                         f"die picks from (any of: {', '.join(CORRUPT_KINDS)})")
     ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument(
+        "--robust-agg", default="none", choices=list(ROBUST_RULES),
+        help="Byzantine-resilient aggregation rule (docs/robustness.md): "
+             "none (plain weighted mean, bitwise the undefended round), "
+             "trimmed (coordinate-wise trimmed mean), median (coordinate-wise "
+             "median), or normclip (per-delta norm clipping before the "
+             "weighted mean)",
+    )
+    ap.add_argument("--trim-fraction", type=float, default=0.1,
+                    help="--robust-agg trimmed: fraction of extreme values "
+                         "trimmed from EACH tail per coordinate")
+    ap.add_argument("--clip-mult", type=float, default=3.0,
+                    help="--robust-agg normclip: clip threshold as a multiple "
+                         "of the cohort's median delta norm (used when "
+                         "--clip-norm is 0)")
+    ap.add_argument("--clip-norm", type=float, default=0.0,
+                    help="--robust-agg normclip: absolute clip threshold "
+                         "(0 = derive from --clip-mult; required >0 with "
+                         "--cohort-tile)")
+    ap.add_argument(
+        "--screen", action="store_true",
+        help="delta screen at the admission boundary: non-finite deltas are "
+             "rejected unconditionally and norm outliers (median/MAD z-score "
+             "past --screen-z) are zero-weighted (sync) or rejected at the "
+             "buffer door (async)",
+    )
+    ap.add_argument("--screen-z", type=float, default=6.0,
+                    help="--screen: robust z-score threshold for norm outliers")
+    ap.add_argument("--screen-warmup", type=int, default=8,
+                    help="async --screen: admitted norms observed before the "
+                         "adaptive bound engages (unbounded until then)")
+    ap.add_argument(
+        "--rollback", action="store_true",
+        help="divergence guard + automatic rollback (requires --ckpt-dir): "
+             "when the update norm spikes past --rollback-factor × the "
+             "trailing window median (or goes non-finite), the server "
+             "restores params/outer from the last good checkpoint and "
+             "quarantines the round's contributors (sync)",
+    )
+    ap.add_argument("--rollback-window", type=int, default=8,
+                    help="--rollback: trailing update norms in the guard window")
+    ap.add_argument("--rollback-factor", type=float, default=4.0,
+                    help="--rollback: spike multiple over the window median "
+                         "that trips the guard")
+    ap.add_argument("--quarantine-rounds", type=int, default=4,
+                    help="rounds a screened/rolled-back client is excluded "
+                         "from aggregation")
+    ap.add_argument("--byzantine-fraction", type=float, default=0.0,
+                    help="simulated attack (async inproc, bench harness): "
+                         "population clients below floor(fraction·P) corrupt "
+                         "every delta they push")
+    ap.add_argument("--byzantine-kind", default="scale",
+                    choices=[k for k in CORRUPT_KINDS if k != "replay"],
+                    help="what the --byzantine-fraction attackers send")
     ap.add_argument(
         "--control", default="static", choices=["static", "staleness", "cohort"],
         help="closed-loop aggregation control (docs/control.md): static = the "
@@ -476,6 +591,43 @@ def run(args, cfg=None) -> dict:
             "--runtime sockets requires --aggregation async: the socket server "
             "IS the buffered-aggregation event loop (docs/runtime.md)"
         )
+    try:
+        robust = _robust_from_args(args)
+    except ValueError as e:
+        raise SystemExit(f"--robust-agg: {e}")
+    if robust is not None and args.rollback and not args.ckpt_dir:
+        raise SystemExit(
+            "--rollback restores the server from the last good checkpoint — "
+            "it requires --ckpt-dir"
+        )
+    if robust is not None and robust.active and args.fused_server:
+        raise SystemExit(
+            "--robust-agg/--screen and --fused-server are mutually exclusive: "
+            "the fused Pallas server path computes the plain weighted mean "
+            "in one pass and has no robust-rule variant (docs/robustness.md)"
+        )
+    if robust is not None and args.cohort_tile:
+        if robust.screen:
+            raise SystemExit(
+                "--screen needs the whole cohort's delta norms at once and "
+                "cannot compose with --cohort-tile streaming; use "
+                "--robust-agg trimmed/median (tiled per-coordinate folds) "
+                "or normclip with an absolute --clip-norm"
+            )
+        if robust.rule == "normclip" and robust.clip_norm <= 0.0:
+            raise SystemExit(
+                "--robust-agg normclip under --cohort-tile needs an absolute "
+                "--clip-norm: the median-derived threshold (--clip-mult) "
+                "requires every cohort norm before any tile is folded"
+            )
+    if args.byzantine_fraction > 0.0 and (
+        args.aggregation != "async" or args.runtime != "inproc"
+    ):
+        raise SystemExit(
+            "--byzantine-fraction is the in-process async attack simulator "
+            "(the bench harness hook); under --runtime sockets inject payload "
+            "corruption with --chaos-corrupt instead"
+        )
     if args.aggregation == "async":
         if args.cohort_tile:
             raise SystemExit(
@@ -508,7 +660,7 @@ def run(args, cfg=None) -> dict:
     agg = SyncAggregator(
         loss_fn, fed, pcfg, codec=codec, seed=args.seed,
         partial_progress=args.partial_progress, fused_server=args.fused_server,
-        cohort_tile=args.cohort_tile,
+        cohort_tile=args.cohort_tile, robust=robust,
         params=params, rng=jax.random.PRNGKey(args.seed + 1),
         tracer=tracer, controller=controller,
     )
@@ -654,6 +806,47 @@ def _run_sync_rounds(args, model, agg, streams, val_stream, ckpt, logger,
             f"stragglers={plan.n_stragglers} dropped={plan.n_dropped}"
             f"{partial} [{metrics['seconds']:.1f}s]"
         )
+        # the round boundary is also the divergence-guard control point: the
+        # guard sees this round's update norm BEFORE the checkpoint save, so a
+        # poisoned round is rolled back and never becomes a resume point
+        rs = agg.robust_state
+        tripped = rolled_back = False
+        if rs is not None and agg.robust is not None and agg.robust.rollback:
+            metrics["rolled_back"] = 0.0
+            tripped = rs.observe_update(metrics["pseudo_grad_norm"])
+            if tripped:
+                good = rs.last_good
+                if good >= 0 and ckpt is not None:
+                    like = {"params": agg.state["params"],
+                            "outer": agg.state["outer"]}
+                    restored, _ = ckpt.load_server(good, like)
+                    agg.adopt_model(restored)
+                    contributors = [int(c) for c in sel[plan.mask]]
+                    rs.add_quarantine(contributors, rnd)
+                    rs.note_rollback()
+                    rolled_back = True
+                    metrics["rolled_back"] = 1.0
+                    if agg.tracer.enabled:
+                        agg.tracer.point(
+                            "rollback", round=rnd, restored_round=good,
+                            pg_norm=float(metrics["pseudo_grad_norm"])
+                            if metrics["pseudo_grad_norm"]
+                            == metrics["pseudo_grad_norm"] else -1.0,
+                            quarantined=len(contributors),
+                        )
+                        agg.tracer.count("rollbacks")
+                    print(
+                        f"  ROLLBACK: update norm "
+                        f"{metrics['pseudo_grad_norm']:.4g} tripped the "
+                        f"divergence guard — restored round {good}, "
+                        f"quarantined {contributors} for "
+                        f"{agg.robust.quarantine_rounds} rounds"
+                    )
+                else:
+                    print(
+                        "  divergence guard tripped but no good checkpoint "
+                        "exists yet — continuing without rollback"
+                    )
         # the round boundary is the sync control point: the cohort tuner sees
         # this round's composed row and may move the deadline/cohort knobs for
         # the NEXT round (applied knobs echo into the logged row)
@@ -667,6 +860,13 @@ def _run_sync_rounds(args, model, agg, streams, val_stream, ckpt, logger,
         if logger:
             logger.log(metrics)
         if ckpt:
+            if rs is not None and (not tripped or rolled_back):
+                # marked BEFORE checkpoint() so the saved manifest's last_good
+                # points at THIS round — valid exactly when this checkpoint is
+                # complete. A post-rollback checkpoint qualifies too: it holds
+                # the restored clean state (and keeps the rollback target
+                # inside the GC's keep-last window across consecutive trips)
+                rs.mark_good(rnd)
             tree, agg_manifest = agg.checkpoint()
             ckpt.save_server(
                 rnd, tree, extra={"args": vars(args), "aggregator": agg_manifest}
@@ -692,6 +892,10 @@ _ASYNC_RESUME_ARGS = (
     "dp_clip", "dp_noise", "pseudo_grad_dtype",
     "control", "control_target", "control_quantile", "control_gain",
     "control_window", "control_interval",
+    "robust_agg", "trim_fraction", "clip_mult", "clip_norm",
+    "screen", "screen_z", "screen_warmup",
+    "rollback", "rollback_window", "rollback_factor", "quarantine_rounds",
+    "byzantine_fraction", "byzantine_kind",
 )
 
 # flags with TRUTHY defaults that postdate older checkpoints: a checkpoint
@@ -703,6 +907,15 @@ _RESUME_ARG_DEFAULTS = {
     "control_quantile": 0.9,
     "control_window": 4,
     "control_interval": 1,
+    "robust_agg": "none",
+    "trim_fraction": 0.1,
+    "clip_mult": 3.0,
+    "screen_z": 6.0,
+    "screen_warmup": 8,
+    "rollback_window": 8,
+    "rollback_factor": 4.0,
+    "quarantine_rounds": 4,
+    "byzantine_kind": "scale",
 }
 
 
@@ -767,6 +980,7 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
             pcfg, partial_progress=True, local_steps=args.local_steps
         )
     controller = _build_controller(args, acfg=acfg)
+    robust = _robust_from_args(args)
 
     def loss_fn(p, b):
         return model.loss(p, b)
@@ -861,15 +1075,20 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
         driver = FederationDriver(
             backend, fed, acfg, pcfg, flush_deadline=args.flush_deadline,
             seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
-            codec=codec, state=state, dispatch=dispatch,
+            codec=codec, state=state, dispatch=dispatch, robust=robust,
             fused_server=args.fused_server, tracer=tracer, controller=controller,
         )
     else:
         driver = AsyncFederationDriver(
             loss_fn, fed, acfg, pcfg, make_batches,
             seed=args.seed, params=params, rng=jax.random.PRNGKey(args.seed + 1),
-            codec=codec, state=state, dispatch=dispatch,
+            codec=codec, state=state, dispatch=dispatch, robust=robust,
             fused_server=args.fused_server, tracer=tracer, controller=controller,
+        )
+        # the in-process attack simulator: deterministic Byzantine population
+        # clients poison every delta they push (the robust-agg bench arms)
+        driver.corrupt_fn = make_byzantine_fn(
+            args.byzantine_fraction, args.byzantine_kind, args.population
         )
     metrics_srv = _start_metrics(
         args, tracer,
@@ -943,9 +1162,48 @@ def _run_async(args, cfg, model, fed, pcfg, streams, val_stream, params, codec=N
             print("  control: " + ", ".join(
                 f"{k}={v:g}" for k, v in knobs.items()
             ))
+        # divergence guard (async): a spiking flush norm rolls the server back
+        # to the last good checkpointed update. Contributors are NOT
+        # quarantined here — the flushed buffer mixes many senders and the
+        # lanes are already drained; repeat offenders are the door screen's
+        # job (docs/robustness.md)
+        rs = driver.robust_state
+        tripped = rolled_back = False
+        if rs is not None and robust is not None and robust.rollback:
+            row["rolled_back"] = 0.0
+            tripped = rs.observe_update(row["pseudo_grad_norm"])
+            if tripped:
+                good = rs.last_good
+                if good >= 0 and ckpt is not None:
+                    like = {"params": driver.state["params"],
+                            "outer": driver.state["outer"]}
+                    restored, _ = ckpt.load_server(good, like)
+                    driver.adopt_model(restored)
+                    rs.note_rollback()
+                    rolled_back = True
+                    row["rolled_back"] = 1.0
+                    if driver.tracer.enabled:
+                        driver.tracer.point(
+                            "rollback", round=u, restored_round=good,
+                        )
+                        driver.tracer.count("rollbacks")
+                    print(
+                        f"  ROLLBACK: flush norm tripped the divergence "
+                        f"guard — restored update {good} (buffer drained)"
+                    )
+                else:
+                    print(
+                        "  divergence guard tripped but no good checkpoint "
+                        "exists yet — continuing without rollback"
+                    )
         if logger:
             logger.log(row)
         if ckpt:
+            if rs is not None and (not tripped or rolled_back):
+                # pre-checkpoint mark (same discipline as the sync path): the
+                # manifest's last_good points at this update, valid exactly
+                # when this checkpoint commits
+                rs.mark_good(u)
             # the CANONICAL aggregator checkpoint: buffer lanes, the residual
             # store, the K in-flight params snapshots (state pytree) plus the
             # dispatch cursor / per-slot finish-time+version tags (manifest) —

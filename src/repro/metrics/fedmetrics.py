@@ -177,8 +177,14 @@ def histogram_quantile(counts, q: float) -> float:
 def window_mean(rows, key: str, default: float = 0.0) -> float:
     """Mean of ``row[key]`` over the rows of a metrics window that carry the
     key; ``default`` when none do (empty window, or a metric the current
-    configuration never emits)."""
-    vals = [float(r[key]) for r in rows if r.get(key) is not None]
+    configuration never emits). Non-finite values are skipped, not averaged:
+    a single NaN round metric (a poisoned cohort before the screen engages)
+    must not turn every downstream window statistic — and the control loop
+    decisions made from them — into NaN forever."""
+    vals = [
+        float(r[key]) for r in rows
+        if r.get(key) is not None and math.isfinite(float(r[key]))
+    ]
     if not vals:
         return float(default)
     return float(sum(vals) / len(vals))
@@ -186,12 +192,14 @@ def window_mean(rows, key: str, default: float = 0.0) -> float:
 
 def window_concat(rows, key: str) -> List[float]:
     """Concatenate per-row LIST metrics (e.g. ``admitted_staleness``) across a
-    metrics window; rows without the key contribute nothing."""
+    metrics window; rows without the key contribute nothing, and non-finite
+    elements are dropped (same NaN-propagation discipline as
+    :func:`window_mean`)."""
     out: List[float] = []
     for r in rows:
         v = r.get(key)
         if v:
-            out.extend(float(x) for x in v)
+            out.extend(float(x) for x in v if math.isfinite(float(x)))
     return out
 
 

@@ -17,6 +17,10 @@ nonzero on violation — CI runs it against the chaos demo's trace:
 * **no silently-unclosed spans**: an open span is only excused when its exact
   process *incarnation* (proc, pid) logged a chaos ``kill`` fault — a crash
   may leave half-open spans, but then the crash itself must be in the audit;
+* every **norm-visible injected payload corruption** (``corrupt_nan`` /
+  ``corrupt_inf`` fault instants) was defended against — screened at the
+  door, quarantined, dedup-dropped, or unwound by a later rollback
+  (:func:`corruption_coverage`);
 * with ``--expect-faults``: the audit is non-empty (chaos actually fired).
 """
 from __future__ import annotations
@@ -34,7 +38,17 @@ from .export import round_rollups, write_chrome_trace
 #: outcomes a dispatch span may legally close with
 TERMINAL_OUTCOMES = (
     "admitted", "rejected", "rejected_stale", "no_show", "inflight_at_exit",
+    "quarantined",
 )
+
+#: corruption kinds the delta screen is REQUIRED to catch: they make the
+#: delta norm non-finite, which the admission screen rejects unconditionally.
+#: ``scale`` may legitimately pass during the screen's warmup window,
+#: ``sign_flip`` is norm-invariant (a robust rule's problem, not the
+#: screen's), and ``replay`` is a valid-looking stale payload (the
+#: staleness/dedup machinery's problem) — none of those three can be audited
+#: as must-screen.
+SCREENABLE_CORRUPTIONS = ("nan", "inf")
 
 
 def dispatch_table(events: Sequence[Event]) -> List[Dict[str, Any]]:
@@ -135,6 +149,57 @@ def straggler_breakdown(events: Sequence[Event]) -> Dict[str, Any]:
     return out
 
 
+def corruption_coverage(events: Sequence[Event]) -> List[str]:
+    """Audit that every *norm-visible* injected payload corruption (NaN/Inf —
+    the kinds the delta screen must reject unconditionally) was actually
+    defended against. A corruption at dispatch index ``i`` is accounted for
+    when any of these holds:
+
+    * a ``screen_reject`` instant exists for index ``i`` (the door caught it);
+    * the dispatch closed with a non-``admitted`` outcome (quarantined sender,
+      staleness rejection, the frame never arrived, still in flight at exit);
+    * the dispatch saw duplicate pushes (redispatch raced a clean execution —
+      first-result-wins may have admitted the clean twin, and the trace cannot
+      tell which push carried the poison);
+    * a ``rollback`` instant fires at or after the corruption (the divergence
+      guard unwound whatever got through).
+
+    A NaN/Inf corruption that was admitted with none of those excuses is a
+    defense failure and fails ``--check``.
+    """
+    problems: List[str] = []
+    screened = {
+        ev.attrs.get("index")
+        for ev in events
+        if ev.name == "screen_reject" and ev.ph == "i"
+    }
+    rollbacks = [ev.ts for ev in events if ev.name == "rollback" and ev.ph == "i"]
+    rows = {r["index"]: r for r in dispatch_table(events)}
+    for ev in events:
+        if ev.name != "fault" or ev.ph != "i":
+            continue
+        kind = str(ev.attrs.get("kind", ""))
+        if not kind.startswith("corrupt_"):
+            continue
+        if kind[len("corrupt_"):] not in SCREENABLE_CORRUPTIONS:
+            continue
+        idx = ev.attrs.get("index")
+        if idx in screened:
+            continue
+        row = rows.get(idx)
+        if row is None or row["outcome"] != "admitted":
+            continue
+        if any(p["dup"] for p in row["pushes"]):
+            continue
+        if any(ts >= ev.ts for ts in rollbacks):
+            continue
+        problems.append(
+            f"injected {kind} at dispatch index {idx} was ADMITTED with no "
+            f"screen_reject, no quarantine, and no subsequent rollback"
+        )
+    return problems
+
+
 def check_run(events: Sequence[Event], expect_faults: bool = False) -> List[str]:
     """Structural invariants of a merged timeline; returns human-readable
     problems (empty list == pass)."""
@@ -176,6 +241,8 @@ def check_run(events: Sequence[Event], expect_faults: bool = False) -> List[str]
                 f"orphan open assignment span {ev.span!r} in {ev.proc}: "
                 f"parent dispatch {ev.parent!r} unknown to the server"
             )
+
+    problems.extend(corruption_coverage(events))
 
     if expect_faults and not fault_audit(events):
         problems.append("expected injected faults but the audit is empty")

@@ -270,6 +270,17 @@ class FederationDriver(AsyncBufferAggregator):
             if rejected and self.residuals is None:
                 self.work_wasted += ev.duration
                 self._trace_complete(ev, "rejected_stale", staleness=staleness)
+            elif (
+                self.robust_state is not None
+                and self.robust_state.is_quarantined(
+                    int(ev.client), int(self.state["round"])
+                )
+            ):
+                # quarantined sender: the upload was already computed and
+                # fetched (the reorder buffer needs the slot retired and the
+                # data cursor advanced), but it never reaches the buffer
+                self.work_wasted += ev.duration
+                self._trace_complete(ev, "quarantined")
             else:
                 if self.residuals is not None:
                     cid = jnp.asarray(ev.client, jnp.int32)
@@ -281,6 +292,7 @@ class FederationDriver(AsyncBufferAggregator):
                 payload = jax.tree_util.tree_map(jnp.asarray, res.payload)
                 self.uplink_bytes_total += self._bytes_per_upload
                 m = self.admit(payload, version, self.event_weight(ev))
+                self._note_admission(ev, m)
                 rec = self._trace_admit(ev, m)
                 if float(m["accepted"]) > 0:
                     self.work_completed += ev.duration

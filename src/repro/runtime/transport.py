@@ -32,6 +32,7 @@ import json
 import socket
 import struct
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -42,12 +43,23 @@ LIST_MARK = "\x1e"  # path segment prefix: this node is a list element
 TUPLE_MARK = "\x1d"  # path segment prefix: this node is a tuple element
 _RESERVED = (SEP, LIST_MARK, TUPLE_MARK)
 _LEN = struct.Struct("!Q")
+_CRC = struct.Struct("!I")  # CRC-32 of the payload, between length and body
 _HDR = struct.Struct("!I")
 MAX_FRAME = 1 << 33  # 8 GiB sanity bound — a corrupt length must not OOM us
+FRAME_OVERHEAD = _LEN.size + _CRC.size  # per-frame bytes beyond the payload
 
 
 class TransportError(ConnectionError):
     """Framing/EOF/decoding failure — retryable by reconnecting."""
+
+
+class FrameCorruptError(TransportError):
+    """Payload CRC mismatch — the bytes on the wire are not the bytes sent.
+
+    A subclass of :class:`TransportError` so every existing retry/backoff
+    path (worker ``_rpc``, server accept loop) absorbs it by reconnecting;
+    the typed class exists so tests and audits can tell corruption apart
+    from a plain EOF."""
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -182,14 +194,20 @@ def recv_exact(sock: socket.socket, n: int) -> bytes:
 
 
 def send_frame(sock: socket.socket, payload: bytes) -> None:
-    sock.sendall(_LEN.pack(len(payload)) + payload)
+    sock.sendall(_LEN.pack(len(payload)) + _CRC.pack(zlib.crc32(payload)) + payload)
 
 
 def recv_frame(sock: socket.socket) -> bytes:
     (n,) = _LEN.unpack(recv_exact(sock, _LEN.size))
     if n > MAX_FRAME:
         raise TransportError(f"frame length {n} exceeds MAX_FRAME")
-    return recv_exact(sock, n)
+    (crc,) = _CRC.unpack(recv_exact(sock, _CRC.size))
+    payload = recv_exact(sock, n)
+    if zlib.crc32(payload) != crc:
+        raise FrameCorruptError(
+            f"frame CRC mismatch ({len(payload)} bytes): payload corrupted in flight"
+        )
+    return payload
 
 
 def send_msg(
@@ -205,7 +223,7 @@ def send_msg(
     never returns at all.
 
     ``tracer`` counts wire truth — actual frame bytes handed to the socket
-    (payload + the 8-byte length prefix), counted only for messages that
+    (payload + the length prefix + the CRC), counted only for messages that
     really go out: the chaos roll happens first, so dropped/killed sends never
     inflate ``bytes_tx``.
     """
@@ -214,7 +232,7 @@ def send_msg(
     payload = encode_msg(mtype, meta, trees)
     send_frame(sock, payload)
     if tracer is not None and tracer.enabled:
-        tracer.count("bytes_tx", len(payload) + _LEN.size)
+        tracer.count("bytes_tx", len(payload) + FRAME_OVERHEAD)
         tracer.count("msgs_tx")
     return True
 
@@ -222,7 +240,7 @@ def send_msg(
 def recv_msg(sock: socket.socket, tracer=None) -> Message:
     payload = recv_frame(sock)
     if tracer is not None and tracer.enabled:
-        tracer.count("bytes_rx", len(payload) + _LEN.size)
+        tracer.count("bytes_rx", len(payload) + FRAME_OVERHEAD)
         tracer.count("msgs_rx")
     return decode_msg(payload)
 

@@ -149,6 +149,14 @@ class ClientWorker:
             )
             with self.tracer.span("train", span_id=f"{sid}/t", parent=sid):
                 meta, trees = self._execute(reply)
+            if self._monkey is not None:
+                # payload corruption happens here — after training, before
+                # framing — so the frame CRC passes and only the server's
+                # delta screen / robust rule stands between the poison and
+                # the model
+                trees["payload"], _ = self._monkey.on_payload(
+                    trees["payload"], index
+                )
             self.tracer.begin("push", span_id=f"{sid}/p", parent=sid)
             ack = self._rpc("push", meta, trees)
             self.tracer.end(f"{sid}/p", ok=ack is not None)

@@ -1,0 +1,646 @@
+"""Byzantine-resilient aggregation (core/robust.py + docs/robustness.md).
+
+Keystone identities:
+  - every defense OFF is BITWISE the undefended round — sync, async and
+    tiled: an inactive ``RobustAggConfig`` installs no apply_fn at all;
+  - the delta screen catches what it must: non-finite deltas never touch the
+    model (sync zero-weight + sanitize, async door rejection), and the
+    NaN-aware aggregation metrics stay finite with a poisoned lane;
+  - robust rules beat the plain mean under attack on constructed cohorts
+    (trimmed/median ignore the outlier lane entirely; normclip bounds it);
+  - tiled folds reproduce the flat robust rules (allclose — the summation
+    order differs by construction);
+  - quarantine/guard/rollback state rides the checkpoint manifest: a
+    killed-and-resumed defended run is bitwise the uninterrupted one, and a
+    legacy (pre-robust) manifest restores to a clean slate;
+  - the CRC-framed transport turns in-flight byte flips into a typed,
+    retryable error instead of feeding garbage to the decoder.
+"""
+import json
+import socket
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import make_batches, make_params, quad_loss, sgd_inner
+
+from repro.checkpoint import CheckpointManager
+from repro.core import (
+    AsyncAggConfig,
+    AsyncFederationDriver,
+    FederatedConfig,
+    OuterOptConfig,
+    ParticipationConfig,
+    RobustAggConfig,
+    RobustState,
+    SyncAggregator,
+    aggregation_metrics,
+    corrupt_tree,
+    make_byzantine_fn,
+    make_robust_apply_fn,
+    masked_median,
+    screen_cohort,
+    trimmed_mean_clients,
+    median_clients,
+    normclip_scale,
+    sanitize_deltas,
+    apply_aggregate,
+    init_federated_state,
+)
+
+
+def _fed(c, tau, **kw):
+    return FederatedConfig(
+        clients_per_round=c, local_steps=tau, inner=sgd_inner(),
+        outer=OuterOptConfig(name="fedavg", lr=1.0), **kw,
+    )
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_trees_close(a, b, rtol=1e-5, atol=1e-6):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=rtol,
+                                   atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# screen + rule primitives
+# ---------------------------------------------------------------------------
+
+
+def test_masked_median_matches_numpy_over_valid_lanes():
+    x = jnp.asarray([5.0, 1.0, 9.0, 3.0, 7.0])
+    mask = jnp.asarray([True, True, False, True, True])
+    assert float(masked_median(x, mask)) == float(np.median([5.0, 1.0, 3.0, 7.0]))
+    assert float(masked_median(x, jnp.ones(5, bool))) == 5.0
+    assert float(masked_median(x, jnp.zeros(5, bool))) == 0.0
+
+
+def test_screen_cohort_flags_nonfinite_and_outliers_only():
+    norms = jnp.asarray([1.0, 1.1, 0.9, 1.05, jnp.nan, 64.0])
+    w = jnp.ones(6)
+    new_w, flagged, finite = screen_cohort(norms, w, z=6.0)
+    np.testing.assert_array_equal(
+        np.asarray(flagged), [False, False, False, False, True, True]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(finite), [True, True, True, True, False, True]
+    )
+    np.testing.assert_array_equal(np.asarray(new_w), [1, 1, 1, 1, 0, 0])
+
+    # a clean, tight cohort passes through BITWISE (all-False where is exact)
+    clean = jnp.asarray([1.0, 1.1, 0.9, 1.05])
+    w4 = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    kept, flagged, _ = screen_cohort(clean, w4, z=6.0)
+    assert not bool(flagged.any())
+    np.testing.assert_array_equal(np.asarray(kept), np.asarray(w4))
+
+
+def test_sanitize_deltas_zeroes_only_nonfinite_lanes():
+    deltas = {"w": jnp.asarray([[1.0, 2.0], [jnp.nan, jnp.inf], [3.0, 4.0]])}
+    finite = jnp.asarray([True, False, True])
+    out = sanitize_deltas(deltas, finite)
+    np.testing.assert_array_equal(
+        np.asarray(out["w"]), [[1.0, 2.0], [0.0, 0.0], [3.0, 4.0]]
+    )
+    # all-finite is bitwise passthrough
+    clean = {"w": jnp.asarray([[1.0, 2.0], [3.0, 4.0]])}
+    out2 = sanitize_deltas(clean, jnp.asarray([True, True]))
+    np.testing.assert_array_equal(np.asarray(out2["w"]), np.asarray(clean["w"]))
+
+
+def test_trimmed_mean_and_median_match_numpy_reference():
+    rng = np.random.default_rng(0)
+    vals = rng.normal(size=(7, 3, 2)).astype(np.float32)
+    deltas = {"w": jnp.asarray(vals)}
+    admit = jnp.ones(7, bool)
+
+    got = np.asarray(trimmed_mean_clients(deltas, admit, trim_fraction=0.2)["w"])
+    k = int(0.2 * 7)  # = 1 from each tail
+    srt = np.sort(vals, axis=0)
+    np.testing.assert_allclose(got, srt[k:7 - k].mean(axis=0), rtol=1e-6)
+
+    med = np.asarray(median_clients(deltas, admit)["w"])
+    np.testing.assert_allclose(med, np.median(vals, axis=0), rtol=1e-6)
+
+    # non-admitted lanes are excluded from both
+    admit2 = jnp.asarray([True] * 5 + [False] * 2)
+    med2 = np.asarray(median_clients(deltas, admit2)["w"])
+    np.testing.assert_allclose(med2, np.median(vals[:5], axis=0), rtol=1e-6)
+
+
+def test_normclip_scale_bounds_outliers_and_zeroes_unadmitted():
+    norms = jnp.asarray([1.0, 2.0, 100.0, jnp.inf])
+    admit = jnp.asarray([True, True, True, False])
+    s = np.asarray(normclip_scale(norms, admit, tau=4.0))
+    np.testing.assert_allclose(s, [1.0, 1.0, 0.04, 0.0], rtol=1e-6)
+
+
+def test_robust_rules_resist_scale_attack_where_mean_fails():
+    """One attacker amplifies its delta ×1000: the plain mean is dragged far
+    off the honest mean, trimmed/median stay within the honest spread."""
+    rng = np.random.default_rng(1)
+    honest = rng.normal(size=(7, 4)).astype(np.float32)
+    attack = np.concatenate([honest, honest[:1] * 1000.0], axis=0)
+    deltas = {"w": jnp.asarray(attack)}
+    admit = jnp.ones(8, bool)
+    honest_mean = honest.mean(axis=0)
+
+    plain = np.asarray(deltas["w"]).mean(axis=0)
+    trimmed = np.asarray(trimmed_mean_clients(deltas, admit, trim_fraction=0.15)["w"])
+    med = np.asarray(median_clients(deltas, admit)["w"])
+
+    assert np.abs(plain - honest_mean).max() > 10.0
+    assert np.abs(trimmed - honest_mean).max() < 1.0
+    assert np.abs(med - honest_mean).max() < 2.0
+
+
+# ---------------------------------------------------------------------------
+# NaN-aware aggregation metrics (satellite: NaN propagation fix)
+# ---------------------------------------------------------------------------
+
+
+def test_aggregation_metrics_survive_nonfinite_lane():
+    norms = jnp.asarray([1.0, 1.0, jnp.nan])
+    pg = jnp.asarray(0.5)
+    m = aggregation_metrics(norms, pg, None)
+    assert float(m["nonfinite_deltas"]) == 1.0
+    for key in ("client_delta_norm_mean", "client_consensus",
+                "effective_clients", "weight_entropy"):
+        assert np.isfinite(float(m[key])), key
+    # the poisoned lane is excluded from the norm mean, not averaged in
+    np.testing.assert_allclose(float(m["client_delta_norm_mean"]), 1.0,
+                               rtol=1e-6)
+    assert float(m["effective_clients"]) == 2.0
+
+    # weighted variant: the poisoned lane's weight drops out of every sum
+    w = jnp.asarray([1.0, 1.0, 5.0])
+    mw = aggregation_metrics(norms, pg, w)
+    assert float(mw["nonfinite_deltas"]) == 1.0
+    for key in ("client_delta_norm_mean", "client_consensus",
+                "weight_entropy"):
+        assert np.isfinite(float(mw[key])), key
+    assert float(mw["effective_clients"]) == 2.0
+
+    # all-finite cohorts are numerically unchanged (the where is all-True)
+    clean = jnp.asarray([1.0, 1.0, 1.0])
+    mc = aggregation_metrics(clean, pg, None)
+    assert float(mc["nonfinite_deltas"]) == 0.0
+    np.testing.assert_allclose(float(mc["client_delta_norm_mean"]), 1.0,
+                               rtol=1e-6)
+
+
+def test_window_reductions_skip_nonfinite():
+    from repro.metrics import window_mean
+    from repro.metrics.fedmetrics import window_concat
+
+    rows = [{"a": 1.0}, {"a": float("nan")}, {"a": 3.0}, {"a": float("inf")}]
+    assert window_mean(rows, "a") == 2.0
+    rows2 = [{"s": [0.0, float("nan"), 2.0]}]
+    assert window_concat(rows2, "s") == [0.0, 2.0]
+
+
+# ---------------------------------------------------------------------------
+# robust apply_fn at the aggregation seam
+# ---------------------------------------------------------------------------
+
+
+def _state(c, seed=3):
+    return init_federated_state(
+        _fed(c, 2), make_params(), rng=jax.random.PRNGKey(seed)
+    )
+
+
+def test_inactive_robust_apply_fn_refuses_construction():
+    with pytest.raises(ValueError):
+        make_robust_apply_fn(_fed(4, 2), RobustAggConfig())
+
+
+def test_robust_apply_none_rule_with_screen_matches_plain_when_clean():
+    """Screen on, rule none, clean tight cohort: the screen flags nobody and
+    the aggregate equals the plain weighted mean bitwise (all-True wheres)."""
+    c = 4
+    fed = _fed(c, 2)
+    deltas = {"w": jax.random.normal(jax.random.PRNGKey(7), (c, 4, 4)) * 0.01}
+    w = jnp.ones(c)
+    s0, m0 = apply_aggregate(fed, _state(c), deltas, client_weights=w)
+    fn = make_robust_apply_fn(fed, RobustAggConfig(screen=True))
+    s1, m1 = fn(fed, _state(c), deltas, client_weights=w)
+    _assert_trees_equal(s0["params"], s1["params"])
+    assert float(m1["screened_clients"]) == 0.0
+
+
+def test_robust_apply_screen_neutralizes_nan_lane():
+    c = 4
+    fed = _fed(c, 2)
+    good = jax.random.normal(jax.random.PRNGKey(8), (c, 4, 4)) * 0.01
+    deltas = {"w": good.at[1].set(jnp.nan)}
+    fn = make_robust_apply_fn(fed, RobustAggConfig(screen=True))
+    s1, m1 = fn(fed, _state(c), deltas, client_weights=jnp.ones(c))
+    assert bool(jnp.all(jnp.isfinite(s1["params"]["w"])))
+    assert float(m1["screened_clients"]) >= 1.0
+    assert float(m1["nonfinite_deltas"]) == 1.0
+    assert bool(np.asarray(m1["screen_mask"])[1])
+    # plain mean on the same cohort is destroyed
+    s0, _ = apply_aggregate(fed, _state(c), deltas, client_weights=jnp.ones(c))
+    assert not bool(jnp.all(jnp.isfinite(s0["params"]["w"])))
+
+
+# ---------------------------------------------------------------------------
+# bitwise-off identity + tiled composition through the SyncAggregator
+# ---------------------------------------------------------------------------
+
+
+def _sync(robust=None, cohort_tile=None, seed=0, pop=8, c=4, tau=2):
+    fed = _fed(c, tau)
+    pcfg = ParticipationConfig(population=pop, clients_per_round=c)
+    return SyncAggregator(
+        quad_loss, fed, pcfg, seed=seed, params=make_params(),
+        rng=jax.random.PRNGKey(seed + 1), robust=robust, cohort_tile=cohort_tile,
+    )
+
+
+@pytest.mark.parametrize("tile", [None, 2])
+def test_sync_robust_fully_off_is_bitwise_plain(tile):
+    a = _sync(cohort_tile=tile)
+    b = _sync(robust=RobustAggConfig(), cohort_tile=tile)
+    for r in range(3):
+        batches = make_batches(2, 4, seed=r)
+        ma = a.run_round(batches, a.plan(r))
+        mb = b.run_round(batches, b.plan(r))
+    _assert_trees_equal(a.state, b.state)
+    assert float(ma["pseudo_grad_norm"]) == float(mb["pseudo_grad_norm"])
+
+
+@pytest.mark.parametrize("rule", ["trimmed", "median"])
+def test_tiled_robust_rule_matches_flat(rule):
+    cfg = RobustAggConfig(rule=rule, trim_fraction=0.25)
+    flat, tiled = _sync(robust=cfg), _sync(robust=cfg, cohort_tile=2)
+    for r in range(2):
+        batches = make_batches(2, 4, seed=r)
+        flat.run_round(batches, flat.plan(r))
+        tiled.run_round(batches, tiled.plan(r))
+    _assert_trees_close(flat.state["params"], tiled.state["params"])
+
+
+def test_tiled_normclip_requires_absolute_tau_and_matches_flat():
+    with pytest.raises(ValueError):
+        _sync(robust=RobustAggConfig(rule="normclip"), cohort_tile=2)
+    with pytest.raises(ValueError):
+        _sync(robust=RobustAggConfig(screen=True), cohort_tile=2)
+    cfg = RobustAggConfig(rule="normclip", clip_norm=0.05)
+    flat, tiled = _sync(robust=cfg), _sync(robust=cfg, cohort_tile=2)
+    for r in range(2):
+        batches = make_batches(2, 4, seed=r)
+        flat.run_round(batches, flat.plan(r))
+        tiled.run_round(batches, tiled.plan(r))
+    _assert_trees_close(flat.state["params"], tiled.state["params"])
+
+
+def test_sync_screen_quarantines_poisoned_client():
+    agg = _sync(robust=RobustAggConfig(screen=True, quarantine_rounds=2))
+    plan = agg.plan(0)
+    batches = make_batches(2, 4, seed=0)
+    batches["x"] = batches["x"].at[:, 1].set(jnp.nan)  # poison cohort lane 1
+    m = agg.run_round(batches, plan)
+    assert bool(jnp.all(jnp.isfinite(agg.state["params"]["w"])))
+    assert float(m["nonfinite_deltas"]) == 1.0
+    bad_cid = int(np.asarray(plan.selected)[1])
+    assert agg.robust_state.is_quarantined(bad_cid, 1)
+    assert not agg.robust_state.is_quarantined(bad_cid, 1 + 2)  # expiry
+
+
+# ---------------------------------------------------------------------------
+# corruption primitives + byzantine simulator
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_tree_kinds():
+    tree = {"w": jnp.ones((2, 2)), "idx": jnp.zeros((2,), jnp.int32)}
+    assert bool(jnp.all(jnp.isnan(corrupt_tree(tree, "nan")["w"])))
+    assert bool(jnp.all(jnp.isinf(corrupt_tree(tree, "inf")["w"])))
+    np.testing.assert_array_equal(
+        np.asarray(corrupt_tree(tree, "scale")["w"]), np.full((2, 2), 64.0)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(corrupt_tree(tree, "sign_flip")["w"]), np.full((2, 2), -1.0)
+    )
+    for kind in ("nan", "inf", "scale", "sign_flip"):
+        # integer planes (codec index lanes) are never touched
+        np.testing.assert_array_equal(
+            np.asarray(corrupt_tree(tree, kind)["idx"]), np.zeros(2)
+        )
+    with pytest.raises(ValueError):
+        corrupt_tree(tree, "replay")
+
+
+def test_make_byzantine_fn_targets_low_ids_only():
+    fn = make_byzantine_fn(0.25, "nan", population=8)  # clients 0, 1
+    delta = {"w": jnp.ones(3)}
+    assert bool(jnp.all(jnp.isnan(fn(0, 0, delta)["w"])))
+    assert bool(jnp.all(jnp.isnan(fn(1, 5, delta)["w"])))
+    np.testing.assert_array_equal(np.asarray(fn(2, 1, delta)["w"]), np.ones(3))
+    assert make_byzantine_fn(0.0, "nan", 8) is None
+    with pytest.raises(ValueError):
+        make_byzantine_fn(0.5, "replay", 8)
+
+
+def test_chaos_on_payload_corruption_is_seeded_and_replay_works():
+    from repro.runtime import ChaosConfig
+    from repro.runtime.chaos import ChaosMonkey
+
+    cfg = ChaosConfig(corrupt=1.0, corrupt_kinds=("replay",), seed=3)
+    mk = ChaosMonkey(cfg, "w0")
+    t0 = {"w": jnp.ones(2)}
+    t1 = {"w": jnp.full(2, 2.0)}
+    out0, kind0 = mk.on_payload(t0, 0)
+    assert kind0 == "sign_flip"  # no previous push → replay degrades
+    np.testing.assert_array_equal(np.asarray(out0["w"]), -np.ones(2))
+    out1, kind1 = mk.on_payload(t1, 1)
+    assert kind1 == "replay"
+    np.testing.assert_array_equal(np.asarray(out1["w"]), np.ones(2))  # t0 replayed
+
+    # deterministic per (seed, role): same dice, same kinds
+    mk2 = ChaosMonkey(cfg, "w0")
+    a = mk2.on_payload(t0, 0)[1]
+    b = mk2.on_payload(t1, 1)[1]
+    assert (a, b) == (kind0, kind1)
+
+    off = ChaosMonkey(ChaosConfig(kill=0.1), "w0")
+    same, kind = off.on_payload(t0, 0)
+    assert kind is None and same is t0
+
+    with pytest.raises(ValueError):
+        ChaosConfig(corrupt=0.5, corrupt_kinds=("bogus",))
+
+
+# ---------------------------------------------------------------------------
+# async: screen at the door, quarantine, robust-off bitwise
+# ---------------------------------------------------------------------------
+
+
+def _adriver(robust=None, state=None, dispatch=None, pop=8, c=4, tau=2, buf=3):
+    fed = _fed(c, tau)
+    acfg = AsyncAggConfig(buffer_size=buf, staleness_alpha=0.5)
+    pcfg = ParticipationConfig(population=pop, clients_per_round=c)
+    drv = AsyncFederationDriver(
+        quad_loss, fed, acfg, pcfg,
+        lambda cid: make_batches(tau, 1, seed=100 + cid % 4),
+        seed=0, params=make_params(), rng=jax.random.PRNGKey(1),
+        robust=robust, state=state, dispatch=dispatch,
+    )
+    return drv, fed, acfg, pcfg
+
+
+def test_async_robust_fully_off_is_bitwise_plain():
+    a, *_ = _adriver()
+    b, *_ = _adriver(robust=RobustAggConfig())
+    ha = a.run_updates(4)
+    hb = b.run_updates(4)
+    _assert_trees_equal(a.state, b.state)
+    assert ha == hb
+
+
+def test_async_screen_rejects_byzantine_and_quarantines():
+    drv, *_ = _adriver(
+        robust=RobustAggConfig(screen=True, screen_warmup=3, screen_z=4.0)
+    )
+    drv.corrupt_fn = make_byzantine_fn(0.25, "nan", 8)  # clients 0, 1
+    drv.run_updates(5, max_events=600)
+    rs = drv.robust_state
+    assert bool(jnp.all(jnp.isfinite(drv.state["params"]["w"])))
+    assert rs.counters["screen_rejects"] > 0
+    assert set(rs.quarantine) <= {0, 1}  # only the attackers
+    assert len(rs.norm_history) > 0
+
+
+def test_async_robust_kill_and_resume_is_bitwise(tmp_path):
+    """Defended async run: quarantine table, screen history and counters ride
+    the manifest — the resumed continuation is bitwise the uninterrupted run."""
+    robust = RobustAggConfig(screen=True, screen_warmup=3, screen_z=4.0)
+    atk = make_byzantine_fn(0.25, "nan", 8)
+
+    a, *_ = _adriver(robust=robust)
+    a.corrupt_fn = atk
+    a.run_updates(6, max_events=800)
+
+    b, fed, acfg, pcfg = _adriver(robust=robust)
+    b.corrupt_fn = atk
+    b.run_updates(3, max_events=800)
+    tree, manifest = b.checkpoint()
+    assert "robust" in manifest
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save_server(2, tree, extra={"aggregator": manifest})
+
+    from repro.core import AsyncBufferAggregator
+
+    like = AsyncBufferAggregator.checkpoint_template(
+        fed, acfg, pcfg, make_params(), None
+    )
+    restored, man = ckpt.load_server(2, like)
+    c, *_ = _adriver(
+        robust=robust, state=restored, dispatch=man["extra"]["aggregator"]
+    )
+    c.corrupt_fn = atk
+    assert c.robust_state.state_dict() == b.robust_state.state_dict()
+    c.run_updates(3, max_events=800)
+
+    _assert_trees_equal(a.state, c.state)
+    assert a.robust_state.state_dict() == c.robust_state.state_dict()
+
+
+def test_legacy_manifest_without_robust_key_restores_clean_slate():
+    plain, *_ = _adriver()
+    plain.run_updates(2)
+    tree, manifest = plain.checkpoint()
+    assert "robust" not in manifest  # undefended checkpoints are unchanged
+    drv, *_ = _adriver(
+        robust=RobustAggConfig(screen=True), state=tree, dispatch=manifest
+    )
+    rs = drv.robust_state
+    assert rs.quarantine == {} and len(rs.norm_history) == 0
+    assert rs.last_good == -1
+
+
+# ---------------------------------------------------------------------------
+# sync: defended kill-and-resume (quarantine expiry + guard window ride along)
+# ---------------------------------------------------------------------------
+
+
+def test_sync_robust_kill_and_resume_is_bitwise():
+    robust = RobustAggConfig(screen=True, rollback=True, quarantine_rounds=3)
+
+    def poisoned(r):
+        batches = make_batches(2, 4, seed=r)
+        if r == 1:  # one poisoned round populates quarantine + history
+            batches["x"] = batches["x"].at[:, 2].set(jnp.nan)
+        return batches
+
+    a = _sync(robust=robust)
+    for r in range(5):
+        m = a.run_round(poisoned(r), a.plan(r))
+        a.robust_state.observe_update(m["pseudo_grad_norm"])
+        a.robust_state.mark_good(r)
+
+    b = _sync(robust=robust)
+    for r in range(2):
+        m = b.run_round(poisoned(r), b.plan(r))
+        b.robust_state.observe_update(m["pseudo_grad_norm"])
+        b.robust_state.mark_good(r)
+    tree, manifest = b.checkpoint()
+    assert "robust" in manifest
+    # the manifest is JSON-serializable (it rides CheckpointManager's JSON)
+    manifest = json.loads(json.dumps(manifest))
+
+    c = _sync(robust=robust)
+    c.restore(tree, manifest)
+    assert c.robust_state.state_dict() == b.robust_state.state_dict()
+    for r in range(2, 5):
+        m = c.run_round(poisoned(r), c.plan(r))
+        c.robust_state.observe_update(m["pseudo_grad_norm"])
+        c.robust_state.mark_good(r)
+
+    _assert_trees_equal(a.state, c.state)
+    assert a.robust_state.state_dict() == c.robust_state.state_dict()
+
+
+# ---------------------------------------------------------------------------
+# divergence guard + RobustState mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_guard_trips_on_spike_and_nonfinite_only_when_warm():
+    rs = RobustState(RobustAggConfig(rollback=True, rollback_window=4,
+                                     rollback_factor=4.0))
+    assert rs.observe_update(float("nan"))  # non-finite always trips
+    for v in (1.0, 1.1, 0.9, 1.0):
+        assert not rs.observe_update(v)
+    assert not rs.observe_update(1.2)  # within factor
+    assert rs.observe_update(40.0)  # spike vs window median ~1.0
+    # the triggering value is NOT absorbed into the window
+    assert rs.observe_update(40.0)
+
+
+def test_norm_bound_floors_at_twice_median():
+    rs = RobustState(RobustAggConfig(screen=True, screen_warmup=3, screen_z=6.0))
+    assert rs.norm_bound() == float("inf")  # cold start
+    for v in (1.0, 1.0, 1.0):
+        rs.observe_norm(v)
+    # MAD = 0 → the bound still leaves 2× headroom for honest drift
+    assert rs.norm_bound() == 2.0
+    rs.observe_norm(float("nan"))  # ignored
+    assert len(rs.norm_history) == 3
+
+
+def test_robust_state_dict_roundtrips_by_json():
+    rs = RobustState(RobustAggConfig(screen=True, rollback=True))
+    rs.add_quarantine([3, 5], rnd=2)
+    rs.observe_norm(1.5)
+    rs.observe_update(0.7)
+    rs.mark_good(2)
+    rs.note_screen_rejects(2)
+    rs.note_rollback()
+    sd = json.loads(json.dumps(rs.state_dict()))
+    rs2 = RobustState(rs.cfg)
+    rs2.load_state_dict(sd)
+    assert rs2.state_dict() == rs.state_dict()
+    assert rs2.is_quarantined(3, 2) and not rs2.is_quarantined(3, 99)
+
+
+# ---------------------------------------------------------------------------
+# CRC-framed transport (satellite: integrity on the wire)
+# ---------------------------------------------------------------------------
+
+
+def test_frame_crc_roundtrip_and_detects_byte_flip():
+    from repro.runtime.transport import (
+        FrameCorruptError,
+        TransportError,
+        encode_msg,
+        recv_msg,
+        send_frame,
+        send_msg,
+    )
+
+    assert issubclass(FrameCorruptError, TransportError)  # retryable
+
+    a, b = socket.socketpair()
+    try:
+        assert send_msg(a, "push", {"index": 7}, {"payload": jnp.ones(3)})
+        msg = recv_msg(b)
+        assert msg.meta["index"] == 7
+        np.testing.assert_array_equal(np.asarray(msg.trees["payload"]), np.ones(3))
+
+        # flip one payload byte mid-frame (after the 8B length + 4B CRC)
+        raw = encode_msg("push", {"index": 8}, {"payload": jnp.ones(3)})
+        import struct
+        import zlib
+
+        frame = struct.pack("!Q", len(raw)) + struct.pack("!I", zlib.crc32(raw))
+        corrupted = bytearray(raw)
+        corrupted[len(corrupted) // 2] ^= 0xFF
+        a.sendall(frame + bytes(corrupted))
+        with pytest.raises(FrameCorruptError):
+            recv_msg(b)
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# report: corruption-coverage audit
+# ---------------------------------------------------------------------------
+
+
+def test_corruption_coverage_audit():
+    from repro.obs.events import Event
+    from repro.obs.report import check_run, corruption_coverage
+
+    def _ev(name, ph, ts, span="", attrs=None):
+        return Event(name=name, ph=ph, ts=ts, mono=ts, proc="server", pid=1,
+                     trace="t", span=span, attrs=attrs or {})
+
+    def dispatch(idx, outcome, ts):
+        return [
+            _ev("dispatch", "B", ts, span=f"d{idx}",
+                attrs={"index": idx, "client": idx, "version": 0}),
+            _ev("dispatch", "E", ts + 1.0, span=f"d{idx}",
+                attrs={"outcome": outcome}),
+        ]
+
+    def fault(idx, kind, ts):
+        return _ev("fault", "i", ts,
+                   attrs={"kind": f"corrupt_{kind}", "index": idx,
+                          "role": "w0"})
+
+    # admitted NaN corruption with no defense → audit failure
+    evs = dispatch(0, "admitted", 0.0) + [fault(0, "nan", 0.5)]
+    assert corruption_coverage(evs)
+    assert any("ADMITTED" in p for p in check_run(evs))
+
+    # same, but screened → clean
+    evs = dispatch(0, "admitted", 0.0) + [
+        fault(0, "nan", 0.5),
+        _ev("screen_reject", "i", 0.7, attrs={"index": 0, "client": 0}),
+    ]
+    assert corruption_coverage(evs) == []
+
+    # quarantined outcome → clean; scale kind → excused (warmup-legal)
+    evs = dispatch(1, "quarantined", 0.0) + [fault(1, "nan", 0.5)]
+    assert corruption_coverage(evs) == []
+    evs = dispatch(2, "admitted", 0.0) + [fault(2, "scale", 0.5)]
+    assert corruption_coverage(evs) == []
+
+    # a later rollback excuses an admitted NaN
+    evs = dispatch(3, "admitted", 0.0) + [
+        fault(3, "nan", 0.5),
+        _ev("rollback", "i", 2.0, attrs={"round": 1, "restored_round": 0}),
+    ]
+    assert corruption_coverage(evs) == []

@@ -449,7 +449,7 @@ def test_transport_counts_framed_bytes_symmetrically():
         b.close()
     tx, rx = sender.snapshot()["counters"], receiver.snapshot()["counters"]
     raw = encode_msg("push", {"index": 1}, {"payload": jnp.ones(3)})
-    assert tx["bytes_tx"] == rx["bytes_rx"] == len(raw) + 8  # + length prefix
+    assert tx["bytes_tx"] == rx["bytes_rx"] == len(raw) + 12  # + len prefix + CRC
     assert tx["msgs_tx"] == rx["msgs_rx"] == 1
 
 
